@@ -1,0 +1,73 @@
+"""Paper Figure 19 + Section 10: flexibility does NOT imply robustness.
+
+For w7 and w11, obtain nominal tunings from every design (incl. K-LSM,
+Fluid, Lazy Leveling, Dostoevsky) and ENDURE's robust tuning (rho=2), then
+evaluate C(w_hat, Phi) as the observed workload drifts away (binned by
+KL-divergence).
+
+Claims: flexible designs win at KL ~ 0 (Fig 4 regime) but degrade like the
+classic nominal tunings under drift; only the robust tuning stays flat —
+robustness comes from the tuning process, not the design."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import (EXPECTED_WORKLOADS, DesignSpace, kl_divergence,
+                        tune_nominal, tune_robust)
+from .common import B_SET, SYS, Row, costs_over_B
+
+MODELS = [
+    ("nominal_classic", lambda w: tune_nominal(w, SYS, seed=0)),
+    ("lazy_leveling", lambda w: tune_nominal(w, SYS,
+                                             DesignSpace.LAZY_LEVELING,
+                                             seed=0)),
+    ("dostoevsky", lambda w: tune_nominal(w, SYS, DesignSpace.DOSTOEVSKY,
+                                          seed=0)),
+    ("fluid", lambda w: tune_nominal(w, SYS, DesignSpace.FLUID, seed=0)),
+    ("klsm", lambda w: tune_nominal(w, SYS, DesignSpace.KLSM,
+                                    n_starts=192, seed=0)),
+    ("endure_rho2", lambda w: tune_robust(w, 2.0, SYS, seed=0)),
+]
+BINS = [(0.0, 0.2), (0.5, 1.0), (2.0, 6.0)]
+
+
+def run() -> List[Row]:
+    import jax.numpy as jnp
+    rows: List[Row] = []
+    for widx in (7, 11):
+        w = EXPECTED_WORKLOADS[widx]
+        kls = np.asarray([float(kl_divergence(jnp.asarray(x),
+                                              jnp.asarray(w)))
+                          for x in B_SET])
+        t0 = time.time()
+        curves = {}
+        for name, tuner in MODELS:
+            costs = costs_over_B(tuner(w).phi)
+            curves[name] = [float(costs[(kls >= lo) & (kls < hi)].mean())
+                            for lo, hi in BINS]
+        us = (time.time() - t0) * 1e6 / len(MODELS)
+
+        # degradation = cost at far drift / cost near expected
+        degr = {k: v[-1] / v[0] for k, v in curves.items()}
+        flex_near = min(curves["klsm"][0], curves["fluid"][0])
+        robust_flattest = degr["endure_rho2"] <= min(
+            v for k, v in degr.items() if k != "endure_rho2") * 1.05
+        robust_best_far = curves["endure_rho2"][-1] <= min(
+            v[-1] for k, v in curves.items() if k != "endure_rho2") * 1.05
+        rows.append(Row(
+            f"fig19_flex_vs_robust_w{widx}", us,
+            cost_near_klsm=round(curves["klsm"][0], 3),
+            cost_near_endure=round(curves["endure_rho2"][0], 3),
+            cost_far_klsm=round(curves["klsm"][-1], 3),
+            cost_far_endure=round(curves["endure_rho2"][-1], 3),
+            claim_flexible_wins_near=flex_near <= curves["endure_rho2"][0]
+            * 1.02,
+            claim_robust_flattest=robust_flattest,
+            claim_robust_best_under_drift=robust_best_far,
+            degradation={k: round(v, 2) for k, v in degr.items()},
+        ))
+    return rows

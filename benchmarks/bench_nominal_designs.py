@@ -1,0 +1,52 @@
+"""Paper Figure 4: nominal tunings of flexible vs classic LSM designs.
+
+For the mixed read/write workload (w7) and the read-heavy workload (w11),
+solve NOMINAL TUNING per design and report average I/Os per query
+normalized to K-LSM (hatched-cyan best performer in the paper's figure).
+
+Expected outcome (paper 5.3): the flexible designs (K-LSM, Fluid) always
+match-or-beat the others; w11 collapses to leveling; Dostoevsky (fixed
+memory) is worst because it cannot move memory between buffer and filters.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import EXPECTED_WORKLOADS, DesignSpace, expected_cost, tune_nominal
+from .common import SYS, Row
+
+DESIGNS = [
+    ("leveling", DesignSpace.LEVELING),
+    ("tiering", DesignSpace.TIERING),
+    ("lazy_leveling", DesignSpace.LAZY_LEVELING),
+    ("1-leveling", DesignSpace.ONE_LEVELING),
+    ("dostoevsky", DesignSpace.DOSTOEVSKY),
+    ("fluid", DesignSpace.FLUID),
+    ("klsm", DesignSpace.KLSM),
+]
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for widx in (7, 11):
+        w = EXPECTED_WORKLOADS[widx]
+        costs = {}
+        t0 = time.time()
+        for name, design in DESIGNS:
+            n_starts = 192 if design is DesignSpace.KLSM else 64
+            r = tune_nominal(w, SYS, design, n_starts=n_starts, seed=0)
+            costs[name] = r.cost
+        us = (time.time() - t0) * 1e6 / len(DESIGNS)
+        base = costs["klsm"]
+        derived = {f"io_norm_{k}": round(v / base, 3)
+                   for k, v in costs.items()}
+        # paper claims: flexible designs produce the best tunings
+        klsm_best = all(base <= v * 1.02 for v in costs.values())
+        derived["klsm_best"] = klsm_best
+        derived["klsm_io"] = round(base, 3)
+        rows.append(Row(f"fig4_nominal_designs_w{widx}", us, **derived))
+    return rows

@@ -1,0 +1,51 @@
+"""Paper Figure 9: Delta(Phi_N, Phi_R) over the (rho, observed-KL) plane.
+
+Claim: nominal wins only (1) when the observed workload is ~= expected
+(KL ~ 0) or (2) when rho < 0.2 while real variation is higher; elsewhere
+robust dominates.  Rule of thumb validated: pick rho ~= max pairwise KL of
+observed workloads."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import EXPECTED_WORKLOADS, kl_divergence, tune_nominal, tune_robust
+from .common import B_SET, SYS, Row, costs_over_B, delta_tp
+
+W7 = EXPECTED_WORKLOADS[7]
+RHOS = (0.1, 0.25, 0.5, 1.0, 2.0, 3.0)
+KL_BINS = [(0.0, 0.2), (0.2, 0.6), (0.6, 1.2), (1.2, 2.5), (2.5, 10.0)]
+
+
+def run() -> List[Row]:
+    import jax.numpy as jnp
+    t0 = time.time()
+    rn = tune_nominal(W7, SYS, seed=0)
+    cn = costs_over_B(rn.phi)
+    kls = np.asarray([float(kl_divergence(jnp.asarray(w), jnp.asarray(W7)))
+                      for w in B_SET])
+
+    grid = {}
+    for rho in RHOS:
+        rr = tune_robust(W7, rho, SYS, seed=0)
+        d = delta_tp(cn, costs_over_B(rr.phi))
+        for lo, hi in KL_BINS:
+            sel = (kls >= lo) & (kls < hi)
+            if sel.any():
+                grid[(rho, lo)] = float(d[sel].mean())
+    us = (time.time() - t0) * 1e6
+
+    # nominal should only win near (small KL) or (tiny rho)
+    nominal_wins = [(rho, lo) for (rho, lo), v in grid.items() if v < 0]
+    ok = all(lo < 0.2 or rho < 0.2 for rho, lo in nominal_wins)
+    robust_region = [v for (rho, lo), v in grid.items()
+                     if rho >= 0.25 and lo >= 0.2]
+    return [Row("fig9_rho_choice", us,
+                claim_nominal_wins_only_near_zero=ok,
+                mean_gain_in_robust_region=round(float(np.mean(
+                    robust_region)), 3),
+                n_grid_cells=len(grid),
+                worst_cell=round(float(np.min(list(grid.values()))), 3))]

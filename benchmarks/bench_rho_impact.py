@@ -1,0 +1,60 @@
+"""Paper Figures 7 & 8: impact of rho for w11 (read-heavy).
+
+Fig 7: Delta(Phi_N, Phi_R) grows with the observed KL-divergence; rho=0
+matches nominal.  Fig 8: the throughput range Theta_B shrinks as rho grows
+(robustness = consistency)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import (EXPECTED_WORKLOADS, kl_divergence, throughput_range,
+                        tune_nominal, tune_robust)
+from .common import B_SET, SYS, Row, costs_over_B, delta_tp
+
+W11 = EXPECTED_WORKLOADS[11]
+RHOS = (0.0, 0.5, 1.0, 2.0)
+
+
+def run() -> List[Row]:
+    import jax.numpy as jnp
+    t0 = time.time()
+    rn = tune_nominal(W11, SYS, seed=0)
+    cn = costs_over_B(rn.phi)
+    kls = np.asarray([float(kl_divergence(jnp.asarray(w),
+                                          jnp.asarray(W11)))
+                      for w in B_SET])
+    bins = [(0.0, 0.2), (0.2, 0.5), (0.5, 1.0), (1.0, 2.0), (2.0, 10.0)]
+
+    rows: List[Row] = []
+    theta_by_rho = {}
+    for rho in RHOS:
+        rr = tune_robust(W11, rho, SYS, seed=0)
+        cr = costs_over_B(rr.phi)
+        d = delta_tp(cn, cr)
+        derived = {}
+        for lo, hi in bins:
+            sel = (kls >= lo) & (kls < hi)
+            if sel.any():
+                derived[f"delta_kl_{lo}_{hi}"] = round(float(d[sel].mean()),
+                                                       3)
+        theta = float(throughput_range(jnp.asarray(B_SET, jnp.float32),
+                                       rr.phi, SYS))
+        theta_by_rho[rho] = theta
+        derived["theta_range"] = round(theta, 4)
+        rows.append(Row(f"fig7_delta_vs_kl_rho{rho}", 0.0, **derived))
+    us = (time.time() - t0) * 1e6 / len(RHOS)
+    for r in rows:
+        r.us = us
+
+    # Fig 8 claim: Theta decreases with rho (higher consistency).
+    thetas = [theta_by_rho[r] for r in RHOS]
+    rows.append(Row("fig8_theta_shrinks", us,
+                    theta_rho0=round(thetas[0], 4),
+                    theta_rho2=round(thetas[-1], 4),
+                    claim_monotone_shrink=bool(thetas[-1] < thetas[0])))
+    # Fig 7 claim: rho=0 ~= nominal; gain grows with KL at rho>=1.
+    return rows

@@ -1,0 +1,82 @@
+"""Roofline aggregation: reads experiments/dryrun/*.json (written by
+repro.launch.dryrun) into the EXPERIMENTS.md tables.
+
+This bench does not compile anything itself — the dry-run is a separate,
+512-device process (see launch/dryrun.py).  Here we summarize per-cell
+terms, check coverage (every (arch x shape) present per mesh), and emit the
+markdown roofline table."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from collections import Counter
+from typing import List
+
+from repro.configs import ARCHS, SHAPES
+from repro.utils.roofline import TABLE_HEADER
+from .common import Row
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records(mesh: str, tag: str = "baseline") -> dict:
+    out = {}
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}__{tag}.json")):
+        r = json.loads(f.read_text())
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def markdown_table(mesh: str, tag: str = "baseline") -> str:
+    recs = load_records(mesh, tag)
+    lines = [TABLE_HEADER]
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | {mesh} | — | — | — | "
+                         f"skipped: {r['reason'][:60]} | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | {mesh} | ERROR | | | | | | |")
+            continue
+        t = r["roofline"]
+        col = ",".join(f"{a}:{v*1e3:.1f}"
+                       for a, v in sorted(t["collective_by_axis"].items()))
+        mem = t.get("memory_per_dev_gb")
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {t['compute_s']*1e3:.1f} "
+            f"| {t['memory_s']*1e3:.1f} | {t['collective_s']*1e3:.1f} ({col}) "
+            f"| **{t['bottleneck']}** | {t['useful_ratio']:.2f} "
+            f"| {t['roofline_frac']:.2f} "
+            f"| {mem:.2f} |" if mem is not None else
+            f"| {arch} | {shape} | {mesh} | ... | - |")
+    return "\n".join(lines)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for mesh in ("single", "multipod"):
+        recs = load_records(mesh)
+        statuses = Counter(r["status"] for r in recs.values())
+        expected = len(ARCHS) * len(SHAPES)
+        bottl = Counter(r["roofline"]["bottleneck"] for r in recs.values()
+                        if r["status"] == "ok")
+        fits = [r for r in recs.values() if r["status"] == "ok"
+                and (r["roofline"].get("memory_per_dev_gb") or 0) <= 16.0]
+        oks = [r for r in recs.values() if r["status"] == "ok"]
+        worst = min(oks, key=lambda r: r["roofline"]["roofline_frac"],
+                    default=None)
+        rows.append(Row(
+            f"roofline_{mesh}", 0.0,
+            cells=f"{len(recs)}/{expected}",
+            ok=statuses.get("ok", 0),
+            skipped=statuses.get("skipped", 0),
+            errors=statuses.get("error", 0),
+            all_compile=statuses.get("error", 0) == 0,
+            bottlenecks=dict(bottl),
+            fits_16gb=f"{len(fits)}/{len(oks)}",
+            worst_cell=(f"{worst['arch']}x{worst['shape']}"
+                        f"={worst['roofline']['roofline_frac']:.3f}"
+                        if worst else "n/a"),
+        ))
+    return rows

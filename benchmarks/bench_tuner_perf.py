@@ -1,0 +1,72 @@
+"""Section Perf (tuner): the JAX vmapped multi-start tuner vs SciPy SLSQP.
+
+The paper (Section 11, Limitations) reports SLSQP instability for the most
+flexible designs.  Here we measure (a) solution quality parity on CLASSIC,
+(b) quality + stability on K-LSM (26 decision vars), and (c) tunings/sec
+throughput of the vmapped tuner (the whole 15-workload sweep is one jit).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import (EXPECTED_WORKLOADS, DesignSpace, tune_nominal,
+                        tune_nominal_slsqp)
+from .common import SYS, Row
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    w7 = EXPECTED_WORKLOADS[7]
+
+    # quality parity on the classic design
+    t0 = time.time()
+    r_jax = tune_nominal(w7, SYS, seed=0)
+    t_jax = time.time() - t0
+    t0 = time.time()
+    r_slsqp = tune_nominal_slsqp(w7, SYS, seed=0)
+    t_slsqp = time.time() - t0
+    rows.append(Row("perf_tuner_classic", t_jax * 1e6,
+                    jax_cost=round(r_jax.cost, 4),
+                    slsqp_cost=round(r_slsqp.cost, 4),
+                    quality_ratio=round(r_slsqp.cost / r_jax.cost, 3),
+                    slsqp_us=round(t_slsqp * 1e6, 1)))
+
+    # K-LSM stability: solve from several seeds, measure spread
+    jax_costs, slsqp_costs = [], []
+    t0 = time.time()
+    for seed in range(4):
+        jax_costs.append(tune_nominal(w7, SYS, DesignSpace.KLSM,
+                                      n_starts=128, seed=seed).cost)
+    t_jax = (time.time() - t0) / 4
+    t0 = time.time()
+    for seed in range(4):
+        slsqp_costs.append(tune_nominal_slsqp(w7, SYS, DesignSpace.KLSM,
+                                              n_starts=6, seed=seed).cost)
+    t_slsqp = (time.time() - t0) / 4
+    spread = lambda v: (max(v) - min(v)) / min(v)
+    rows.append(Row(
+        "perf_tuner_klsm_stability", t_jax * 1e6,
+        jax_best=round(min(jax_costs), 4),
+        jax_spread=round(spread(jax_costs), 4),
+        slsqp_best=round(min(slsqp_costs), 4),
+        slsqp_spread=round(spread(slsqp_costs), 4),
+        claim_jax_more_stable=spread(jax_costs) <= spread(slsqp_costs),
+        claim_jax_no_worse=min(jax_costs) <= min(slsqp_costs) * 1.02,
+        slsqp_us=round(t_slsqp * 1e6, 1)))
+
+    # throughput: steady-state tunings/sec after warmup (jit cached)
+    tune_nominal(EXPECTED_WORKLOADS[1], SYS, seed=0)  # warm
+    t0 = time.time()
+    n = 0
+    for w in EXPECTED_WORKLOADS:
+        tune_nominal(w, SYS, seed=1)
+        n += 1
+    dt = time.time() - t0
+    rows.append(Row("perf_tuner_throughput", dt / n * 1e6,
+                    tunings_per_sec=round(n / dt, 2),
+                    paper_reports="<1s per tuning (Sec 6.2); <10ms Sec 9.3"))
+    return rows

@@ -1,0 +1,51 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure (+ roofline).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig6 tab5  # substring filter
+"""
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (bench_entry_size, bench_flexible_robustness,
+                   bench_nominal_designs, bench_rho_choice, bench_rho_impact,
+                   bench_robust_sharding, bench_robust_vs_nominal,
+                   bench_roofline, bench_system_eval, bench_tuner_perf)
+    suites = [
+        ("fig4", bench_nominal_designs),
+        ("fig6", bench_robust_vs_nominal),
+        ("fig7_8", bench_rho_impact),
+        ("fig9", bench_rho_choice),
+        ("fig10", bench_entry_size),
+        ("tab5", bench_system_eval),
+        ("fig19", bench_flexible_robustness),
+        ("tuner", bench_tuner_perf),
+        ("roofline", bench_roofline),
+        ("robust_sharding", bench_robust_sharding),
+    ]
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, mod in suites:
+        if filters and not any(f in key for f in filters):
+            continue
+        t0 = time.time()
+        try:
+            for row in mod.run():
+                print(row.csv(), flush=True)
+        except Exception:
+            failures += 1
+            print(f"{key},nan,ERROR", flush=True)
+            traceback.print_exc()
+        print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .store import (CheckpointStore, framework_storage_workload,
+                    tuned_manifest_tree)
+
+__all__ = ["CheckpointStore", "framework_storage_workload",
+           "tuned_manifest_tree"]

@@ -1,0 +1,24 @@
+"""Config registry: one module per assigned architecture."""
+
+from .base import SHAPES, EncoderConfig, ModelConfig, MoEConfig, ShapeConfig, shape_applicable
+
+from . import (deepseek_moe_16b, glm4_9b, jamba_1_5_large_398b, mixtral_8x7b,
+               phi3_mini_3_8b, qwen1_5_110b, qwen2_vl_72b, qwen3_14b,
+               rwkv6_3b, whisper_base)
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (qwen1_5_110b, glm4_9b, phi3_mini_3_8b, qwen3_14b, rwkv6_3b,
+              whisper_base, deepseek_moe_16b, mixtral_8x7b, qwen2_vl_72b,
+              jamba_1_5_large_398b)
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ARCHS", "SHAPES", "EncoderConfig", "ModelConfig", "MoEConfig",
+           "ShapeConfig", "get_config", "shape_applicable"]

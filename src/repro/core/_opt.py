@@ -1,0 +1,68 @@
+"""A tiny pure-JAX Adam used by the vmapped multi-start tuners.
+
+Deliberately dependency-free (no optax in the environment) and shaped so that
+`jax.vmap` over independent optimization problems is trivial: state is a flat
+pytree of arrays matching theta.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    mu: jnp.ndarray
+    nu: jnp.ndarray
+    step: jnp.ndarray
+
+
+def adam_init(theta: jnp.ndarray) -> AdamState:
+    return AdamState(mu=jnp.zeros_like(theta), nu=jnp.zeros_like(theta),
+                     step=jnp.zeros((), jnp.int32))
+
+
+def adam_update(grad: jnp.ndarray, state: AdamState, lr: float,
+                b1: float = 0.9, b2: float = 0.999,
+                eps: float = 1e-8) -> Tuple[jnp.ndarray, AdamState]:
+    step = state.step + 1
+    mu = b1 * state.mu + (1 - b1) * grad
+    nu = b2 * state.nu + (1 - b2) * grad * grad
+    mu_hat = mu / (1 - b1 ** step.astype(grad.dtype))
+    nu_hat = nu / (1 - b2 ** step.astype(grad.dtype))
+    delta = lr * mu_hat / (jnp.sqrt(nu_hat) + eps)
+    return delta, AdamState(mu=mu, nu=nu, step=step)
+
+
+def minimize_adam(obj: Callable[[jnp.ndarray], jnp.ndarray],
+                  theta0: jnp.ndarray, steps: int, lr: float,
+                  lr_decay: float = 0.1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run Adam for ``steps`` iterations with cosine lr decay to lr*lr_decay.
+
+    Returns (best_theta, best_value) tracked across the whole trajectory, which
+    makes the optimizer robust to late-stage oscillation.
+    """
+    g = jax.grad(lambda t: obj(t))
+
+    def body(i, carry):
+        theta, st, best_t, best_v = carry
+        frac = i / max(steps - 1, 1)
+        lr_i = lr * (lr_decay + (1 - lr_decay) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * frac)))
+        grad = g(theta)
+        grad = jnp.where(jnp.isfinite(grad), grad, 0.0)
+        delta, st = adam_update(grad, st, lr_i)
+        theta = theta - delta
+        v = obj(theta)
+        better = jnp.isfinite(v) & (v < best_v)
+        best_t = jnp.where(better, theta, best_t)
+        best_v = jnp.where(better, v, best_v)
+        return theta, st, best_t, best_v
+
+    v0 = obj(theta0)
+    v0 = jnp.where(jnp.isfinite(v0), v0, jnp.inf)
+    init = (theta0, adam_init(theta0), theta0, v0)
+    _, _, best_t, best_v = jax.lax.fori_loop(0, steps, body, init)
+    return best_t, best_v

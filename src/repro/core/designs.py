@@ -1,0 +1,136 @@
+"""LSM design-space parameterizations (paper Table 3).
+
+Every design is a differentiable map from an unconstrained parameter vector
+``theta`` to a :class:`~repro.core.lsm_cost.Phi`, plus bookkeeping for the
+number of free parameters.  The tuners (nominal.py / robust.py) are generic
+over designs; this module is what makes K-LSM "unify" leveling, tiering,
+Lazy Leveling, Fluid LSM (Dostoevsky) and 1-Leveling.
+
+Parameterization (sigmoid box transforms keep everything feasible):
+    T       = 2 + (maxT - 2) * sigmoid(t0)
+    m_filt  = (m_total - min_buf) * sigmoid(t1)      [bits]
+    K_i     = 1 + (T - 2) * sigmoid(t_i)             [in [1, T-1]]
+
+``DOSTOEVSKY`` is Fluid-LSM with *fixed* memory allocation (paper Section 5.3:
+m_filt = 10 bits/entry is the whole budget minus a fixed 2 MiB buffer).
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .lsm_cost import LSMSystem, Phi, mbuf_bits, num_levels
+
+
+class DesignSpace(enum.Enum):
+    LEVELING = "leveling"           # K_i = 1
+    TIERING = "tiering"             # K_i = T - 1
+    CLASSIC = "classic"             # best of {leveling, tiering} (ENDURE's pi)
+    LAZY_LEVELING = "lazy_leveling"  # K_L = 1, K_i = T-1 otherwise
+    ONE_LEVELING = "one_leveling"   # K_1 = T-1, K_i = 1 otherwise
+    FLUID = "fluid"                 # K_1..K_{L-1} equal, K_L free
+    DOSTOEVSKY = "dostoevsky"       # FLUID with fixed memory split
+    KLSM = "klsm"                   # every K_i free
+
+
+DOSTOEVSKY_BUF_BITS = 2.0 * 1024 * 1024 * 8  # 2 MiB, paper Section 5.3
+
+
+def n_params(design: DesignSpace, sys: LSMSystem) -> int:
+    if design in (DesignSpace.LEVELING, DesignSpace.TIERING, DesignSpace.CLASSIC):
+        return 2                      # (T, m_filt)
+    if design in (DesignSpace.LAZY_LEVELING, DesignSpace.ONE_LEVELING):
+        return 2
+    if design is DesignSpace.FLUID:
+        return 4                      # (T, m_filt, K_upper, K_last)
+    if design is DesignSpace.DOSTOEVSKY:
+        return 3                      # (T, K_upper, K_last); memory fixed
+    if design is DesignSpace.KLSM:
+        return 2 + sys.max_levels     # (T, m_filt, K_1..K_max)
+    raise ValueError(design)
+
+
+def _T_from(theta0: jnp.ndarray, sys: LSMSystem) -> jnp.ndarray:
+    return 2.0 + (sys.max_T - 2.0) * jax.nn.sigmoid(theta0)
+
+
+def _mfilt_from(theta1: jnp.ndarray, sys: LSMSystem) -> jnp.ndarray:
+    return (sys.m_total_bits - sys.min_buf_bits) * jax.nn.sigmoid(theta1)
+
+
+def _K_from(theta: jnp.ndarray, T: jnp.ndarray) -> jnp.ndarray:
+    return 1.0 + jnp.maximum(T - 2.0, 0.0) * jax.nn.sigmoid(theta)
+
+
+def to_phi(theta: jnp.ndarray, design: DesignSpace, sys: LSMSystem,
+           smooth: bool = False) -> Phi:
+    """Map unconstrained ``theta`` -> feasible ``Phi`` for ``design``."""
+    idx = jnp.arange(1, sys.max_levels + 1, dtype=theta.dtype)
+
+    if design is DesignSpace.DOSTOEVSKY:
+        T = _T_from(theta[0], sys)
+        mfilt = jnp.asarray(sys.m_total_bits - DOSTOEVSKY_BUF_BITS, theta.dtype)
+        K_up = _K_from(theta[1], T)
+        K_last = _K_from(theta[2], T)
+    else:
+        T = _T_from(theta[0], sys)
+        mfilt = _mfilt_from(theta[1], sys)
+        K_up = K_last = None
+
+    if design in (DesignSpace.LEVELING,):
+        K = jnp.ones((sys.max_levels,), theta.dtype)
+    elif design is DesignSpace.TIERING:
+        K = jnp.full((sys.max_levels,), 1.0) * jnp.maximum(T - 1.0, 1.0)
+    elif design is DesignSpace.CLASSIC:
+        raise ValueError("CLASSIC is solved as best-of {LEVELING, TIERING}; "
+                         "tuners handle it explicitly.")
+    elif design in (DesignSpace.LAZY_LEVELING, DesignSpace.ONE_LEVELING,
+                    DesignSpace.FLUID, DesignSpace.DOSTOEVSKY):
+        phi_tmp = Phi(T=T, mfilt_bits=mfilt, K=jnp.ones((sys.max_levels,)))
+        L = num_levels(T, mbuf_bits(phi_tmp, sys), sys, smooth=False)
+        is_last = (idx == L)
+        if design is DesignSpace.LAZY_LEVELING:
+            K = jnp.where(is_last, 1.0, jnp.maximum(T - 1.0, 1.0))
+        elif design is DesignSpace.ONE_LEVELING:
+            K = jnp.where(idx == 1, jnp.maximum(T - 1.0, 1.0), 1.0)
+        else:  # FLUID / DOSTOEVSKY
+            if design is DesignSpace.FLUID:
+                K_up = _K_from(theta[2], T)
+                K_last = _K_from(theta[3], T)
+            K = jnp.where(is_last, K_last, K_up)
+    elif design is DesignSpace.KLSM:
+        K = _K_from(theta[2:2 + sys.max_levels], T)
+    else:
+        raise ValueError(design)
+
+    return Phi(T=T, mfilt_bits=mfilt, K=K)
+
+
+def describe(phi: Phi, sys: LSMSystem) -> str:
+    """Human-readable tuning summary: (T, m_filt bits/entry, K-profile)."""
+    import numpy as np
+    T = float(phi.T)
+    h = float(phi.mfilt_bits) / sys.N
+    L = int(num_levels(phi.T, mbuf_bits(phi, sys), sys))
+    K = np.asarray(phi.K)[:L]
+    if np.allclose(K, 1.0):
+        pol = "L"
+    elif np.allclose(K, max(T - 1.0, 1.0), atol=0.5):
+        pol = "T"
+    else:
+        pol = "K=" + ",".join(f"{k:.0f}" for k in K)
+    return f"(T={T:.1f}, h={h:.1f}b/e, {pol})"
+
+
+InitFn = Callable[[jax.Array, int], jnp.ndarray]
+
+
+def random_inits(key: jax.Array, n: int, design: DesignSpace,
+                 sys: LSMSystem) -> jnp.ndarray:
+    """Multi-start initial thetas, shape (n, n_params)."""
+    p = n_params(design, sys)
+    return jax.random.uniform(key, (n, p), minval=-3.0, maxval=3.0)

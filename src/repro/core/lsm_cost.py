@@ -1,0 +1,233 @@
+"""K-LSM unified cost model (paper Eqs. 1-9), written as differentiable JAX.
+
+The model maps an LSM configuration ``Phi = (T, m_filt, K_1..K_L)`` and system
+parameters to the expected I/O cost of the four query classes
+
+    c(Phi) = (Z0, Z1, Q, W)
+
+- ``Z0``: empty point lookups   (Eq. 4)
+- ``Z1``: non-empty point lookups (Eq. 6)
+- ``Q`` : range lookups          (Eq. 7)
+- ``W`` : writes (amortized)     (Eq. 9)
+
+with Monkey-style per-level Bloom-filter false-positive rates (Eq. 3).
+
+Design notes
+------------
+* Everything is written against a *static* ``max_levels`` ladder with masking
+  so the model is ``jit``/``vmap``/``grad`` compatible.  Levels ``i > L(T)``
+  contribute zero.
+* ``L(T)`` (Eq. 1) uses an exact ``ceil`` by default (paper semantics).  The
+  tuners optionally use a smooth interpolation for better-behaved gradients
+  (the paper relaxes integrality of T the same way, Section 5.2); evaluation
+  is always exact.
+* All memory quantities are in **bits** (paper convention): entry size ``E``
+  in bits, total memory ``m = m_buf + m_filt`` in bits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+LN2_SQ = 0.4804530139182014  # ln(2)^2
+
+
+@dataclasses.dataclass(frozen=True)
+class LSMSystem:
+    """System ("untunable") parameters, paper Table 1 + Section 4.1.
+
+    Defaults follow the paper's model-based study (Sections 5.3, 8.2):
+    10B entries of 1 KiB, 4 KiB pages, 10 bits/entry of total memory.
+    """
+
+    N: float = 1e10              # total number of entries
+    entry_bits: float = 8192.0   # E, bits per entry (1 KiB)
+    page_bits: float = 32768.0   # page size in bits (4 KiB)
+    bits_per_entry: float = 10.0  # total memory budget m / N (filters + buffer)
+    f_a: float = 1.0             # storage read/write asymmetry (writes cost f_a x reads)
+    f_seq: float = 1.0           # sequential-vs-random I/O cost ratio
+    s_rq: float = 5e-9           # range query selectivity S_RQ (short ranges)
+    min_buf_bits: float = 8.0 * 1024 * 1024 * 8  # floor on m_buf (8 MiB), keeps L finite
+    max_levels: int = 24         # static ladder size (must exceed any realistic L)
+    max_T: float = 100.0         # solver bound on size ratio
+
+    @property
+    def B(self) -> float:
+        """Entries per page."""
+        return self.page_bits / self.entry_bits
+
+    @property
+    def m_total_bits(self) -> float:
+        return self.bits_per_entry * self.N
+
+    def replace(self, **kw: Any) -> "LSMSystem":
+        return dataclasses.replace(self, **kw)
+
+
+# Registered as a pytree-compatible static object (hashable dataclass); we pass
+# it through `partial`/closures rather than traced args.
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Phi:
+    """An LSM tuning configuration.
+
+    ``T``: size ratio (scalar, >= 2)
+    ``mfilt_bits``: Bloom-filter memory in bits (scalar); buffer gets the rest.
+    ``K``: per-level run caps, shape ``(max_levels,)``; entries beyond ``L(T)``
+    are ignored by the cost model.
+    """
+
+    T: jnp.ndarray
+    mfilt_bits: jnp.ndarray
+    K: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.T, self.mfilt_bits, self.K), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def round_integral(self, sys: LSMSystem) -> "Phi":
+        """Deploy-time integer rounding (paper Section 5.2): ceil(T), round(K)."""
+        T = jnp.ceil(self.T)
+        K = jnp.clip(jnp.round(self.K), 1.0, jnp.maximum(T - 1.0, 1.0))
+        return Phi(T=T, mfilt_bits=self.mfilt_bits, K=K)
+
+
+def mbuf_bits(phi: Phi, sys: LSMSystem) -> jnp.ndarray:
+    return sys.m_total_bits - phi.mfilt_bits
+
+
+def num_levels(T: jnp.ndarray, mbuf: jnp.ndarray, sys: LSMSystem,
+               smooth: bool = False) -> jnp.ndarray:
+    """Eq. 1: L(T) = ceil( log_T( N*E/m_buf + 1 ) ). ``smooth`` skips the ceil
+    (used only inside gradient-based tuners; evaluation is exact)."""
+    T = jnp.maximum(T, 1.0 + 1e-6)
+    x = sys.N * sys.entry_bits / jnp.maximum(mbuf, sys.min_buf_bits) + 1.0
+    lf = jnp.log(x) / jnp.log(T)
+    if smooth:
+        return jnp.maximum(lf, 1.0)
+    return jnp.maximum(jnp.ceil(lf), 1.0)
+
+
+def level_fprs(phi: Phi, sys: LSMSystem, smooth: bool = False) -> jnp.ndarray:
+    """Eq. 3 (Monkey allocation): per-level false positive rates, shape
+    ``(max_levels,)``, clipped to [~0, 1]. Levels beyond L contribute via the
+    mask applied by callers."""
+    T = jnp.maximum(phi.T, 1.0 + 1e-6)
+    L = num_levels(T, mbuf_bits(phi, sys), sys, smooth=smooth)
+    i = jnp.arange(1, sys.max_levels + 1, dtype=phi.T.dtype)
+    # T^{T/(T-1)} / T^{L+1-i} * exp(-(m_filt/N) ln(2)^2)
+    log_T = jnp.log(T)
+    log_f = (T / (T - 1.0)) * log_T - (L + 1.0 - i) * log_T \
+        - (phi.mfilt_bits / sys.N) * LN2_SQ
+    return jnp.clip(jnp.exp(jnp.minimum(log_f, 0.0)), 1e-30, 1.0)
+
+
+def level_mask(phi: Phi, sys: LSMSystem, smooth: bool = False) -> jnp.ndarray:
+    """1.0 for levels 1..L, 0.0 beyond. With ``smooth`` the last level gets a
+    fractional weight so that d(mask)/dT exists through L."""
+    L = num_levels(phi.T, mbuf_bits(phi, sys), sys, smooth=smooth)
+    i = jnp.arange(1, sys.max_levels + 1, dtype=phi.T.dtype)
+    if smooth:
+        return jnp.clip(L - i + 1.0, 0.0, 1.0)
+    return (i <= L).astype(phi.T.dtype)
+
+
+def _clamped_K(phi: Phi) -> jnp.ndarray:
+    """K_i in [1, T-1] (a leveling run cap floor of 1; tiering cap of T-1)."""
+    return jnp.clip(phi.K, 1.0, jnp.maximum(phi.T - 1.0, 1.0))
+
+
+def empty_read_cost(phi: Phi, sys: LSMSystem, smooth: bool = False) -> jnp.ndarray:
+    """Eq. 4: Z0 = sum_i K_i * f_i."""
+    f = level_fprs(phi, sys, smooth=smooth)
+    m = level_mask(phi, sys, smooth=smooth)
+    K = _clamped_K(phi)
+    return jnp.sum(m * K * f)
+
+
+def nonempty_read_cost(phi: Phi, sys: LSMSystem, smooth: bool = False) -> jnp.ndarray:
+    """Eq. 6: expectation over the level holding the entry of
+    1 (the hit) + false-positive I/Os above + half the runs within the level."""
+    T = jnp.maximum(phi.T, 1.0 + 1e-6)
+    f = level_fprs(phi, sys, smooth=smooth)
+    m = level_mask(phi, sys, smooth=smooth)
+    K = _clamped_K(phi)
+    mbuf = jnp.maximum(mbuf_bits(phi, sys), sys.min_buf_bits)
+    i = jnp.arange(1, sys.max_levels + 1, dtype=phi.T.dtype)
+    # level capacity (entries): (T-1) T^{i-1} m_buf / E   (Eq. 5 summand).
+    # Mask in log-space: exp() of masked-out deep levels would overflow f32
+    # and poison the sum with inf*0 = nan.
+    log_cap = jnp.log(T - 1.0) + (i - 1.0) * jnp.log(T) + jnp.log(mbuf / sys.entry_bits)
+    cap = jnp.exp(jnp.where(m > 0, log_cap, -jnp.inf)) * m
+    Nf = jnp.sum(cap)  # Eq. 5
+    p_level = cap / jnp.maximum(Nf, 1.0)
+    # false positives strictly above level i: cumsum shifted by one
+    kf = m * K * f
+    above = jnp.cumsum(kf) - kf
+    per_level = 1.0 + above + 0.5 * (K - 1.0) * f
+    return jnp.sum(p_level * per_level)
+
+
+def range_cost(phi: Phi, sys: LSMSystem, smooth: bool = False) -> jnp.ndarray:
+    """Eq. 7: Q = f_seq * S_RQ * N/B + sum_i K_i."""
+    m = level_mask(phi, sys, smooth=smooth)
+    K = _clamped_K(phi)
+    return sys.f_seq * sys.s_rq * sys.N / sys.B + jnp.sum(m * K)
+
+
+def write_cost(phi: Phi, sys: LSMSystem, smooth: bool = False) -> jnp.ndarray:
+    """Eq. 9: W = f_seq * (1+f_a)/B * sum_i (T - 1 + K_i) / (2 K_i)."""
+    m = level_mask(phi, sys, smooth=smooth)
+    K = _clamped_K(phi)
+    per_level = (phi.T - 1.0 + K) / (2.0 * K)
+    return sys.f_seq * (1.0 + sys.f_a) / sys.B * jnp.sum(m * per_level)
+
+
+def cost_vector(phi: Phi, sys: LSMSystem, smooth: bool = False) -> jnp.ndarray:
+    """c(Phi) = (Z0, Z1, Q, W), paper Section 3."""
+    return jnp.stack([
+        empty_read_cost(phi, sys, smooth=smooth),
+        nonempty_read_cost(phi, sys, smooth=smooth),
+        range_cost(phi, sys, smooth=smooth),
+        write_cost(phi, sys, smooth=smooth),
+    ])
+
+
+def expected_cost(w: jnp.ndarray, phi: Phi, sys: LSMSystem,
+                  smooth: bool = False) -> jnp.ndarray:
+    """Eq. 2: C(w, Phi) = w^T c(Phi); w = (z0, z1, q, w)."""
+    return jnp.dot(w, cost_vector(phi, sys, smooth=smooth))
+
+
+def throughput(w: jnp.ndarray, phi: Phi, sys: LSMSystem) -> jnp.ndarray:
+    """Paper Section 8.1: throughput := 1 / C(w, Phi)."""
+    return 1.0 / expected_cost(w, phi, sys)
+
+
+# ---------------------------------------------------------------------------
+# Convenience constructors for the classic designs (Table 3 reference points).
+# The tuners build Phi through designs.py; these are for tests/baselines.
+# ---------------------------------------------------------------------------
+
+def make_phi(T: float, mfilt_bits: float, K, sys: LSMSystem) -> Phi:
+    K = jnp.broadcast_to(jnp.asarray(K, dtype=jnp.float32), (sys.max_levels,))
+    return Phi(T=jnp.asarray(T, jnp.float32),
+               mfilt_bits=jnp.asarray(mfilt_bits, jnp.float32), K=K)
+
+
+def leveling_phi(T: float, mfilt_bits: float, sys: LSMSystem) -> Phi:
+    return make_phi(T, mfilt_bits, 1.0, sys)
+
+
+def tiering_phi(T: float, mfilt_bits: float, sys: LSMSystem) -> Phi:
+    return make_phi(T, mfilt_bits, max(T - 1.0, 1.0), sys)

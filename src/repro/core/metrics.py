@@ -1,0 +1,33 @@
+"""Evaluation metrics (paper Section 8.1)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .lsm_cost import LSMSystem, Phi, cost_vector
+
+
+def delta_throughput(w: jnp.ndarray, phi1: Phi, phi2: Phi,
+                     sys: LSMSystem) -> jnp.ndarray:
+    """Normalized delta throughput Delta_w(phi1, phi2); > 0 iff phi2 wins."""
+    c1 = jnp.dot(w, cost_vector(phi1, sys))
+    c2 = jnp.dot(w, cost_vector(phi2, sys))
+    return (1.0 / c2 - 1.0 / c1) / (1.0 / c1)
+
+
+def delta_throughput_batch(W: jnp.ndarray, phi1: Phi, phi2: Phi,
+                           sys: LSMSystem) -> jnp.ndarray:
+    """Vectorized over a workload set, shape (n, 4) -> (n,)."""
+    c1v = cost_vector(phi1, sys)
+    c2v = cost_vector(phi2, sys)
+    c1 = W @ c1v
+    c2 = W @ c2v
+    return (1.0 / c2 - 1.0 / c1) / (1.0 / c1)
+
+
+def throughput_range(W: jnp.ndarray, phi: Phi, sys: LSMSystem) -> jnp.ndarray:
+    """Theta_B(phi) = max over workload pairs of throughput difference
+    = max 1/C - min 1/C over the benchmark set."""
+    thr = 1.0 / (W @ cost_vector(phi, sys))
+    return jnp.max(thr) - jnp.min(thr)

@@ -1,0 +1,203 @@
+"""ROBUST TUNING (paper Problem 2, Section 6): ENDURE.
+
+    Phi_R = argmin_Phi  max_{w' in U^rho_w}  w'^T c(Phi)
+
+Solved through the Ben-Tal et al. dual (Eqs. 16-17):
+
+    min_{Phi, lam>=0, eta}  eta + rho*lam + lam * sum_i w_i phi*_KL((c_i - eta)/lam)
+
+with the KL conjugate ``phi*_KL(s) = e^s - 1``.  The inner minimization over
+``eta`` has the closed form ``eta* = lam * log sum_i w_i exp(c_i / lam)``;
+substituting gives the numerically robust *entropic risk* form
+
+    g(lam; Phi) = rho*lam + lam * logsumexp_i( log w_i + c_i(Phi) / lam )
+
+which we minimize over ``lam`` by geometric-grid + golden refinement inside
+JAX (1-D convex problem), and over ``Phi`` by the same vmapped multi-start
+Adam as the nominal tuner.  This substitution is *exact* (simple calculus on
+Eq. 16), not an approximation; tests assert equality of both forms and a
+~zero primal-dual gap against the exact inner maximizer of workload.py.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import designs
+from ._opt import minimize_adam
+from .designs import DesignSpace
+from .lsm_cost import LSMSystem, Phi, cost_vector, expected_cost
+from .nominal import TuningResult, _theta_bounds
+from .workload import kl_divergence, worst_case_workload
+
+
+def dual_objective_explicit(c: jnp.ndarray, w: jnp.ndarray, rho: float,
+                            lam: jnp.ndarray, eta: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 16 verbatim: eta + rho lam + lam sum w_i (exp((c_i-eta)/lam) - 1)."""
+    lam = jnp.maximum(lam, 1e-12)
+    s = (c - eta) / lam
+    return eta + rho * lam + lam * jnp.sum(w * (jnp.exp(s) - 1.0))
+
+
+def _g_of_lam(c: jnp.ndarray, w: jnp.ndarray, rho: float,
+              lam: jnp.ndarray) -> jnp.ndarray:
+    """g(lam) = rho lam + lam * LSE(log w + c/lam)  (eta eliminated)."""
+    lam = jnp.maximum(lam, 1e-12)
+    return rho * lam + lam * jax.nn.logsumexp(jnp.log(w) + c / lam)
+
+
+def robust_cost(c: jnp.ndarray, w: jnp.ndarray, rho: float,
+                n_grid: int = 64, n_golden: int = 40) -> jnp.ndarray:
+    """Worst-case expected cost  max_{w' in U^rho_w} w'^T c  via the dual.
+
+    The 1-D convex minimization over lam uses a geometric grid spanning the
+    cost scale followed by golden-section refinement.  Differentiable in ``c``
+    via the envelope theorem (gradients flow through g at the minimizing lam).
+    """
+    w = jnp.asarray(w)
+    c = jnp.asarray(c)
+    span = jnp.maximum(jnp.max(c) - jnp.min(c), 1e-9)
+    # lam* scales with span/rho-ish; cover many decades around it.
+    lams = span * jnp.logspace(-6.0, 6.0, n_grid)
+    vals = jax.vmap(lambda l: _g_of_lam(c, w, rho, l))(lams)
+    i = jnp.argmin(vals)
+    lo = lams[jnp.maximum(i - 1, 0)]
+    hi = lams[jnp.minimum(i + 1, n_grid - 1)]
+
+    # Golden-section on log-lam.
+    gr = 0.6180339887498949
+    llo, lhi = jnp.log(lo), jnp.log(hi)
+
+    def body(_, bounds):
+        llo, lhi = bounds
+        a = lhi - gr * (lhi - llo)
+        b = llo + gr * (lhi - llo)
+        fa = _g_of_lam(c, w, rho, jnp.exp(a))
+        fb = _g_of_lam(c, w, rho, jnp.exp(b))
+        smaller = fa < fb
+        return jnp.where(smaller, llo, a), jnp.where(smaller, b, lhi)
+
+    llo, lhi = jax.lax.fori_loop(0, n_golden, body, (llo, lhi))
+    lam_star = jnp.exp(0.5 * (llo + lhi))
+    g = _g_of_lam(c, w, rho, lam_star)
+    # rho = 0 degenerates to the nominal expected cost.
+    return jnp.where(rho <= 0.0, jnp.dot(w, c), g)
+
+
+def robust_phi_objective(phi: Phi, w: jnp.ndarray, rho: float,
+                         sys: LSMSystem, smooth: bool = False) -> jnp.ndarray:
+    return robust_cost(cost_vector(phi, sys, smooth=smooth), w, rho)
+
+
+# ---------------------------------------------------------------------------
+# JAX multi-start robust tuner
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("design", "sys", "n_starts", "steps", "lr"))
+def _tune_robust_batch(key, w, rho, design: DesignSpace, sys: LSMSystem,
+                       n_starts: int, steps: int, lr: float):
+    thetas = designs.random_inits(key, n_starts, design, sys)
+
+    def obj(theta):
+        phi = designs.to_phi(theta, design, sys, smooth=True)
+        return robust_phi_objective(phi, w, rho, sys, smooth=True)
+
+    best_t, _ = jax.vmap(lambda t0: minimize_adam(obj, t0, steps=steps,
+                                                  lr=lr))(thetas)
+
+    def exact_obj(theta):
+        phi = designs.to_phi(theta, design, sys, smooth=False)
+        phi = phi.round_integral(sys)
+        return robust_phi_objective(phi, w, rho, sys, smooth=False)
+
+    exact = jax.vmap(exact_obj)(best_t)
+    i = jnp.argmin(jnp.where(jnp.isfinite(exact), exact, jnp.inf))
+    return best_t[i], exact[i]
+
+
+def tune_robust(w, rho: float, sys: LSMSystem,
+                design: DesignSpace = DesignSpace.CLASSIC,
+                n_starts: int = 64, steps: int = 250, lr: float = 0.25,
+                seed: int = 0) -> TuningResult:
+    """ENDURE: solve ROBUST TUNING for ``design`` at uncertainty radius rho."""
+    w = jnp.asarray(w, jnp.float32)
+    rho = float(rho)
+    if design is DesignSpace.CLASSIC:
+        cands = [tune_robust(w, rho, sys, d, n_starts, steps, lr, seed)
+                 for d in (DesignSpace.LEVELING, DesignSpace.TIERING)]
+        return min(cands, key=lambda r: r.cost)
+
+    key = jax.random.PRNGKey(seed)
+    theta, _ = _tune_robust_batch(key, w, jnp.asarray(rho, jnp.float32),
+                                  design, sys, n_starts, steps, lr)
+    raw_phi = designs.to_phi(theta, design, sys, smooth=False)
+    phi = raw_phi.round_integral(sys)
+    cost = float(robust_phi_objective(phi, w, rho, sys))
+    return TuningResult(phi=phi, cost=cost, design=design, raw_phi=raw_phi,
+                        solver="jax")
+
+
+def tune_robust_slsqp(w, rho: float, sys: LSMSystem,
+                      design: DesignSpace = DesignSpace.CLASSIC,
+                      n_starts: int = 8, seed: int = 0) -> TuningResult:
+    """Paper-faithful SLSQP solve of Eq. 17 (over Phi, lam, eta jointly)."""
+    from scipy.optimize import minimize
+
+    if design is DesignSpace.CLASSIC:
+        cands = [tune_robust_slsqp(w, rho, sys, d, n_starts, seed)
+                 for d in (DesignSpace.LEVELING, DesignSpace.TIERING)]
+        return min(cands, key=lambda r: r.cost)
+
+    w = jnp.asarray(w, jnp.float32)
+    n_phi = designs.n_params(design, sys)
+
+    @jax.jit
+    def obj(x):
+        theta, log_lam, eta = x[:n_phi], x[n_phi], x[n_phi + 1]
+        phi = designs.to_phi(theta, design, sys, smooth=True)
+        c = cost_vector(phi, sys, smooth=True)
+        return dual_objective_explicit(c, w, rho, jnp.exp(log_lam), eta)
+
+    vag = jax.jit(jax.value_and_grad(obj))
+
+    def f(x):
+        v, g = vag(jnp.asarray(x, jnp.float32))
+        return float(v), np.asarray(g, np.float64)
+
+    rng = np.random.default_rng(seed)
+    best_x, best_v = None, np.inf
+    bounds = _theta_bounds(design, sys) + [(-10.0, 10.0), (None, None)]
+    for _ in range(n_starts):
+        x0 = np.concatenate([rng.uniform(-3, 3, n_phi), [0.0], [1.0]])
+        try:
+            res = minimize(f, x0, jac=True, method="SLSQP", bounds=bounds,
+                           options={"maxiter": 300, "ftol": 1e-12})
+        except Exception:
+            continue
+        if np.isfinite(res.fun) and res.fun < best_v:
+            best_x, best_v = res.x, float(res.fun)
+    if best_x is None:
+        return tune_robust(w, rho, sys, design, seed=seed)
+
+    raw_phi = designs.to_phi(jnp.asarray(best_x[:n_phi], jnp.float32),
+                             design, sys)
+    phi = raw_phi.round_integral(sys)
+    cost = float(robust_phi_objective(phi, w, rho, sys))
+    return TuningResult(phi=phi, cost=cost, design=design, raw_phi=raw_phi,
+                        solver="slsqp")
+
+
+# ---------------------------------------------------------------------------
+# Primal-side evaluation helpers
+# ---------------------------------------------------------------------------
+
+def primal_worst_case(phi: Phi, w, rho: float, sys: LSMSystem):
+    """(worst-case workload, worst-case cost) for the *primal* problem; used
+    to verify the zero duality gap (Lemma 1)."""
+    c = cost_vector(phi, sys)
+    w_hat = worst_case_workload(c, jnp.asarray(w), rho)
+    return w_hat, jnp.dot(w_hat, c)

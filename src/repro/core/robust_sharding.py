@@ -1,0 +1,113 @@
+"""Beyond-paper: the ENDURE robust-tuning paradigm applied to mesh/layout
+selection under an uncertain workload mix.
+
+The paper's final remark (Section 11) observes that the robust formulation
+generalizes to "any database tuning problem [with] a known cost model".
+This module instantiates that for the *framework itself*:
+
+  * workload vector  w = (train, prefill, decode, long) step fractions
+    (exactly the 4-dim simplex of the paper's (z0, z1, q, w));
+  * configurations Phi = discrete layout candidates (mesh split, remat,
+    attention impl, SP on/off), each with a measured cost vector c(Phi) =
+    per-class step seconds from the dry-run roofline terms;
+  * ROBUST TUNING = argmin_Phi max_{w' in KL-ball} w'.c(Phi), solved with
+    the same zero-gap dual (robust.robust_cost) — here the "design space"
+    is discrete, so the outer argmin is exact enumeration.
+
+The result is a layout that keeps serving well when the traffic mix drifts
+(long-context bursts, prefill storms) — the systems analogue of the paper's
+"robustness is an outcome of the tuning process" takeaway.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .robust import robust_cost
+from .workload import kl_divergence, worst_case_workload
+
+STEP_CLASSES = ("train", "prefill", "decode", "long")
+
+
+@dataclasses.dataclass
+class LayoutCandidate:
+    name: str
+    step_costs: np.ndarray          # seconds per step class, shape (4,)
+    meta: Optional[Dict] = None
+    worst_case: float = float("nan")
+    nominal_worst_case: float = float("nan")
+
+    def expected_cost(self, mix: np.ndarray) -> float:
+        return float(np.asarray(mix) @ self.step_costs)
+
+
+def nominal_layout(candidates: Sequence[LayoutCandidate],
+                   mix: np.ndarray) -> LayoutCandidate:
+    """Problem 1 analogue: best layout for the expected mix."""
+    return min(candidates, key=lambda c: c.expected_cost(mix))
+
+
+def robust_layout(candidates: Sequence[LayoutCandidate], mix: np.ndarray,
+                  rho: float) -> LayoutCandidate:
+    """Problem 2 analogue: best worst-case layout over the KL ball.
+
+    Discrete Phi -> exact enumeration; the inner max uses the same
+    eta-eliminated dual as the LSM tuner (zero duality gap)."""
+    mix_j = jnp.asarray(mix, jnp.float32)
+    nom = nominal_layout(candidates, mix)
+    nom_wc = float(robust_cost(jnp.asarray(nom.step_costs, jnp.float32),
+                               mix_j, rho))
+    best, best_wc = None, np.inf
+    for c in candidates:
+        wc = float(robust_cost(jnp.asarray(c.step_costs, jnp.float32),
+                               mix_j, rho))
+        c.worst_case = wc
+        c.nominal_worst_case = nom_wc
+        if wc < best_wc:
+            best, best_wc = c, wc
+    return best
+
+
+def adversarial_mix(candidate: LayoutCandidate, mix: np.ndarray,
+                    rho: float) -> np.ndarray:
+    """The traffic mix that realizes the worst case for a layout."""
+    return np.asarray(worst_case_workload(
+        jnp.asarray(candidate.step_costs, jnp.float32),
+        jnp.asarray(mix, jnp.float32), rho))
+
+
+def candidates_from_dryrun(arch: str, dryrun_dir: str,
+                           tags: Sequence[str] = ("baseline",),
+                           mesh: str = "single") -> List[LayoutCandidate]:
+    """Build layout candidates for one arch from dry-run records: one
+    candidate per tag, cost vector = step_time_s of the four shapes."""
+    d = pathlib.Path(dryrun_dir)
+    shape_for = {"train": "train_4k", "prefill": "prefill_32k",
+                 "decode": "decode_32k", "long": "long_500k"}
+    out = []
+    for tag in tags:
+        costs = []
+        ok = True
+        for cls in STEP_CLASSES:
+            f = d / f"{arch}__{shape_for[cls]}__{mesh}__{tag}.json"
+            if not f.exists():
+                ok = False
+                break
+            r = json.loads(f.read_text())
+            if r["status"] == "skipped":
+                costs.append(1e3)   # inapplicable class: huge penalty
+            elif r["status"] != "ok":
+                ok = False
+                break
+            else:
+                costs.append(r["roofline"]["step_time_s"])
+        if ok:
+            out.append(LayoutCandidate(name=f"{arch}:{tag}:{mesh}",
+                                       step_costs=np.asarray(costs)))
+    return out

@@ -1,0 +1,4 @@
+from .pipeline import DataConfig, DataState, global_batch_at, iterate, shard_batch_at
+
+__all__ = ["DataConfig", "DataState", "global_batch_at", "iterate",
+           "shard_batch_at"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+flash_attention/  FlashAttention-2 (causal/SWA/GQA)
+rwkv6/            chunked WKV recurrence (data-dependent decay)
+bloom_probe/      blocked-bloom membership probe (MXU one-hot gather)
+
+Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper) and
+ref.py (pure-jnp oracle).  Validated with interpret=True on CPU; TPU v5e is
+the lowering target.
+"""

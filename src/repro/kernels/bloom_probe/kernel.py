@@ -1,0 +1,85 @@
+"""Batch Bloom-filter probe as a Pallas TPU kernel (blocked bloom filter).
+
+Hardware adaptation (see DESIGN.md): TPUs have no efficient scalar gather,
+so the filter is laid out as a *blocked* bloom filter — each key hashes to
+one block (a row of ``block_bits`` bits) and the row fetch is expressed as a
+one-hot matmul on the MXU.  Bits are stored as an f32 0/1 bit-plane
+(``(num_blocks, block_bits)``), trading 32x memory for gatherability —
+filters are MiB-scale per run (Monkey allocation), so a VMEM-resident tile
+of the plane covers typical per-run filters.
+
+Probing: per key, k derived hashes select bits within its block; membership
+is the min over the k fetched bits.  Hashing is a splitmix-style integer mix
+(matching lsm/bloom.py's first 32 bits) on the VPU.
+
+Grid: (num_key_tiles,) with the whole bit-plane resident; keys processed in
+tiles of 128 (lane width).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+KEY_TILE = 128
+
+
+def _mix32(x: jnp.ndarray, seed: int) -> jnp.ndarray:
+    """splitmix-like 32-bit mix, elementwise on uint32."""
+    x = x + jnp.uint32(seed) * jnp.uint32(0x9E3779B9)
+    x = (x ^ (x >> jnp.uint32(16))) * jnp.uint32(0x85EBCA6B)
+    x = (x ^ (x >> jnp.uint32(13))) * jnp.uint32(0xC2B2AE35)
+    return x ^ (x >> jnp.uint32(16))
+
+
+def _probe_kernel(keys_ref, plane_ref, out_ref, *, num_blocks: int,
+                  block_bits: int, num_hashes: int):
+    keys = keys_ref[...]                                  # (tile,) uint32
+    tile = keys.shape[0]
+    plane = plane_ref[...]                                # (blocks, bits) f32
+
+    block = (_mix32(keys, 1) % jnp.uint32(num_blocks)).astype(jnp.int32)
+    onehot_b = (block[:, None] ==
+                jax.lax.broadcasted_iota(jnp.int32, (tile, num_blocks), 1)
+                ).astype(jnp.float32)
+    rows = jax.lax.dot(onehot_b, plane)                   # (tile, bits)
+
+    member = jnp.ones((tile,), jnp.float32)
+    for j in range(num_hashes):
+        bit = (_mix32(keys, j + 2) % jnp.uint32(block_bits)).astype(jnp.int32)
+        onehot_bit = (bit[:, None] ==
+                      jax.lax.broadcasted_iota(jnp.int32, (tile, block_bits),
+                                               1)).astype(jnp.float32)
+        val = jnp.sum(rows * onehot_bit, axis=1)          # (tile,)
+        member = member * val
+    out_ref[...] = member
+
+
+@functools.partial(jax.jit, static_argnames=("num_hashes", "interpret"))
+def bloom_probe_kernel(keys: jax.Array, plane: jax.Array,
+                       num_hashes: int = 4,
+                       interpret: bool = False) -> jax.Array:
+    """keys: (N,) uint32 (N % 128 == 0); plane: (num_blocks, block_bits)
+    f32 0/1 bit-plane. Returns (N,) f32 membership (1.0 = maybe present)."""
+    N = keys.shape[0]
+    assert N % KEY_TILE == 0, N
+    num_blocks, block_bits = plane.shape
+    kernel = functools.partial(_probe_kernel, num_blocks=num_blocks,
+                               block_bits=block_bits, num_hashes=num_hashes)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // KEY_TILE,),
+        in_specs=[
+            pl.BlockSpec((KEY_TILE,), lambda i: (i,)),
+            pl.BlockSpec((num_blocks, block_bits), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((KEY_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(keys, plane)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the blocked-bloom probe kernel (+ builder)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mix32(x, seed: int):
+    x = np.asarray(x, np.uint32)
+    with np.errstate(over="ignore"):
+        x = x + np.uint32(seed) * np.uint32(0x9E3779B9)
+        x = (x ^ (x >> np.uint32(16))) * np.uint32(0x85EBCA6B)
+        x = (x ^ (x >> np.uint32(13))) * np.uint32(0xC2B2AE35)
+        return x ^ (x >> np.uint32(16))
+
+
+def build_plane(keys: np.ndarray, num_blocks: int, block_bits: int,
+                num_hashes: int) -> np.ndarray:
+    """Insert keys into an f32 0/1 bit-plane blocked bloom filter."""
+    plane = np.zeros((num_blocks, block_bits), np.float32)
+    block = mix32(keys, 1) % np.uint32(num_blocks)
+    for j in range(num_hashes):
+        bit = mix32(keys, j + 2) % np.uint32(block_bits)
+        plane[block.astype(np.int64), bit.astype(np.int64)] = 1.0
+    return plane
+
+
+def probe_ref(keys: np.ndarray, plane: np.ndarray,
+              num_hashes: int) -> np.ndarray:
+    num_blocks, block_bits = plane.shape
+    block = mix32(keys, 1) % np.uint32(num_blocks)
+    member = np.ones(len(keys), np.float32)
+    for j in range(num_hashes):
+        bit = mix32(keys, j + 2) % np.uint32(block_bits)
+        member *= plane[block.astype(np.int64), bit.astype(np.int64)]
+    return member

@@ -1,0 +1,134 @@
+"""FlashAttention-2-style fused attention as a Pallas TPU kernel.
+
+Tiling: grid = (batch*heads, num_q_blocks, num_kv_blocks); the kv dimension
+is the innermost ("arbitrary") grid axis so the online-softmax running
+statistics (m, l, acc) live in VMEM scratch across kv steps.  Block shapes
+are (BLOCK_Q, head_dim) / (BLOCK_KV, head_dim) — head_dim in {64, 96, 128}
+keeps the MXU matmuls 128-lane aligned; BLOCK_Q/BLOCK_KV default to 128.
+
+Causal + sliding-window masking is applied inside the kernel from absolute
+block offsets; fully-masked kv blocks are skipped via
+``pl.when`` (rather than host-side grid pruning, which keeps BlockSpecs
+static).  GQA is handled by the ops.py wrapper (kv heads repeated to q
+heads before the call — a broadcast, free under TP sharding).
+
+Validated in interpret mode against ref.py on CPU; TPU v5e is the target.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 causal: bool, window: Optional[int], block_q: int,
+                 block_kv: int, num_kv_blocks: int, sm_scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # Skip kv blocks that are entirely masked for this q block.
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(run,
+                              k_start + block_kv - 1 > q_start - window)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[...].astype(jnp.float32) * sm_scale      # (bq, d)
+        k = k_ref[...].astype(jnp.float32)                 # (bkv, d)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq,bkv)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_kv), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_kv), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                             # (bq, bkv)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())))
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finish():
+        # rows with no valid kv (shouldn't happen for causal q>=0) guard
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_kv: int = DEFAULT_BLOCK_KV,
+                           interpret: bool = False) -> jax.Array:
+    """q/k/v: (BH, S, d) with equal head counts (GQA pre-expanded).
+
+    Returns (BH, S, d) in q.dtype."""
+    BH, S, d = q.shape
+    Sk = k.shape[1]
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, Sk)
+    assert S % block_q == 0 and Sk % block_kv == 0, (S, Sk, block_q, block_kv)
+    nq = S // block_q
+    nkv = Sk // block_kv
+    sm_scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _attn_kernel, causal=causal, window=window, block_q=block_q,
+        block_kv=block_kv, num_kv_blocks=nkv, sm_scale=sm_scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_kv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_kv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

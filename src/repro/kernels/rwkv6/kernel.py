@@ -1,0 +1,106 @@
+"""RWKV-6 WKV recurrence as a chunked Pallas TPU kernel.
+
+Grid = (batch*heads, num_chunks); chunks are the innermost ("arbitrary")
+axis so the (n x n) recurrent state lives in VMEM scratch across chunk
+steps.  Within a chunk the pairwise log-space decay form is used (exponents
+always <= 0 -> numerically stable), with the three large contractions
+(intra-chunk attention x v, r x state, and k_tail^T x v state update)
+expressed as dots for the MXU.  Matches models/rwkv.wkv_chunked (= ref.py)
+exactly.
+
+Block shapes: (chunk, n) tiles for r/k/v/logw and the output; (n, n) f32
+state scratch.  n (head dim) is 64 across the assigned archs; chunk=32
+keeps the (chunk, chunk, n) pairwise tensor at 256 KiB of VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_out_ref,
+                state_ref, *, chunk: int, num_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[...].astype(jnp.float32)        # (c, n)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    lw = lw_ref[...].astype(jnp.float32)      # log decay, < 0
+    u = u_ref[...].astype(jnp.float32)        # (1, n)
+
+    Lc = jnp.cumsum(lw, axis=0)               # (c, n) inclusive
+    Lc_prev = Lc - lw                         # exclusive
+    total = Lc[-1:, :]                        # (1, n)
+
+    # intra-chunk: att[t,j] = sum_i r[t,i] k[j,i] e^{Lc_prev[t,i]-Lc[j,i]}
+    D = Lc_prev[:, None, :] - Lc[None, :, :]  # (c, c, n), <= 0 on tril
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    E = jnp.exp(jnp.where(tri[:, :, None], D, -jnp.inf))
+    att = jnp.sum(r[:, None, :] * k[None, :, :] * E, axis=2)   # (c, c)
+    y = jax.lax.dot(att, v)                                     # (c, n)
+
+    # current-token bonus: (sum_i r[t,i] u[i] k[t,i]) v[t]
+    diag = jnp.sum(r * u * k, axis=1, keepdims=True)            # (c, 1)
+    y = y + diag * v
+
+    # inter-chunk: y += (r * e^{Lc_prev}) @ S
+    y = y + jax.lax.dot(r * jnp.exp(Lc_prev), state_ref[...])
+
+    # state update: S = S * e^{total}^T + sum_j e^{total-Lc[j]} k_j v_j^T
+    k_tail = k * jnp.exp(total - Lc)                            # (c, n)
+    state_ref[...] = state_ref[...] * jnp.exp(total).T + \
+        jax.lax.dot(k_tail.T, v)
+
+    o_ref[...] = y.astype(o_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit_state():
+        s_out_ref[...] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_kernel(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+                 u: jax.Array, chunk: int = 32,
+                 interpret: bool = False):
+    """All of r/k/v/logw: (BH, S, n); u: (BH, n).
+
+    Returns (y (BH, S, n) float32, final_state (BH, n, n) float32)."""
+    BH, S, n = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, num_chunks=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, n), lambda b, c: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, n, n), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, n), jnp.float32),
+            jax.ShapeDtypeStruct((BH, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, logw, u)

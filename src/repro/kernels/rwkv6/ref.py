@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the RWKV6 WKV kernel: the exact per-step recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, logw, u):
+    """r/k/v/logw: (BH, S, n); u: (BH, n). Sequential-scan ground truth.
+
+    Returns (y (BH,S,n) f32, final state (BH,n,n) f32)."""
+    r, k, v, logw = (t.astype(jnp.float32) for t in (r, k, v, logw))
+    u = u.astype(jnp.float32)
+    BH, S, n = r.shape
+
+    def step(state, xs):
+        rt, kt, vt, lwt = xs                       # (BH, n) each
+        a = kt[:, :, None] * vt[:, None, :]        # (BH, n, n)
+        y = jnp.einsum("bn,bnm->bm", rt, state + u[:, :, None] * a)
+        state = state * jnp.exp(lwt)[:, :, None] + a
+        return state, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, logw))
+    state0 = jnp.zeros((BH, n, n), jnp.float32)
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1), state

@@ -1,0 +1,5 @@
+from .mesh import (axis_size, data_axes, make_host_mesh, make_mesh,
+                   make_production_mesh)
+
+__all__ = ["axis_size", "data_axes", "make_host_mesh", "make_mesh",
+           "make_production_mesh"]

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the dry-run needs 512 placeholder CPU devices to build the
+production meshes ((16,16) single pod; (2,16,16) two pods).  Smoke tests and
+benchmarks must NOT import this module (they want 1 device).
+
+Per cell this script:
+  1. builds the step function (train_step / prefill_step / decode_step),
+  2. lowers with ShapeDtypeStruct inputs + NamedShardings (no allocation),
+  3. compiles, prints memory_analysis() (proves it fits) and
+     cost_analysis(), and
+  4. runs the HLO analyzer (utils/hlo.py) for while-corrected FLOPs/bytes
+     and per-axis collective bytes -> roofline terms (utils/roofline.py).
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and are
+aggregated into EXPERIMENTS.md by benchmarks/bench_roofline.py.
+
+CLI:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b \
+      --shape train_4k --mesh single            # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+  ... --set remat=none --set logits_chunk=8192  # hillclimb overrides
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build_model
+from repro.optim import adamw
+from repro.utils import hlo as hlo_mod
+from repro.utils import roofline
+from .mesh import make_production_mesh
+from .sharding import batch_shardings, cache_shardings, param_shardings
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _apply_overrides(cfg: ModelConfig, overrides: Dict[str, str]
+                     ) -> ModelConfig:
+    kw: Dict[str, Any] = {}
+    for k, v in overrides.items():
+        field = {f.name: f for f in dataclasses.fields(cfg)}[k]
+        if field.type in ("int", int):
+            kw[k] = int(v)
+        elif field.type in ("bool", bool):
+            kw[k] = v.lower() in ("1", "true", "yes")
+        elif field.type in ("float", float):
+            kw[k] = float(v)
+        else:
+            kw[k] = v
+    return cfg.replace(**kw)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """-> (jitted fn lowered-ready, example input specs tuple)."""
+    api = build_model(cfg)
+    pspecs = api.param_specs()
+    pshard = param_shardings(pspecs, cfg, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                api.loss_fn, has_aux=True)(params, batch)
+            params, opt_state, om = adamw.update(grads, opt_state, params,
+                                                 opt_cfg)
+            return params, opt_state, {"loss": loss, **om}
+
+        ospec = jax.eval_shape(adamw.init, pspecs)
+        oshard = adamw.AdamWState(
+            step=NamedSharding(mesh, P()),
+            mu=param_shardings(ospec.mu, cfg, mesh),
+            nu=param_shardings(ospec.nu, cfg, mesh))
+        bspecs = api.input_specs(shape)
+        bshard = batch_shardings(bspecs, cfg, mesh, shape)
+        fn = jax.jit(train_step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        return fn, (pspecs, ospec, bspecs)
+
+    if shape.kind == "prefill":
+        bspecs = api.input_specs(shape)
+        bshard = batch_shardings(bspecs, cfg, mesh, shape)
+        fn = jax.jit(api.prefill, in_shardings=(pshard, bshard))
+        return fn, (pspecs, bspecs)
+
+    # decode
+    specs = api.input_specs(shape)
+    cshard = cache_shardings(specs["cache"], cfg, mesh, shape)
+    if isinstance(specs["tokens"], jax.ShapeDtypeStruct) and \
+            specs["tokens"].dtype == jnp.int32:
+        tshard = NamedSharding(mesh, P(None, None))
+    else:
+        tshard = NamedSharding(mesh, P(None, None, None))
+    fn = jax.jit(api.decode_step,
+                 in_shardings=(pshard, cshard, tshard,
+                               NamedSharding(mesh, P())),
+                 out_shardings=None,
+                 donate_argnums=(1,))
+    return fn, (pspecs, specs["cache"], specs["tokens"], specs["pos"])
+
+
+def _make_mesh(mesh_kind: str):
+    """'single' | 'multipod' | 'DxM' custom (data, model) single-pod mesh."""
+    if mesh_kind == "single":
+        return make_production_mesh()
+    if mesh_kind == "multipod":
+        return make_production_mesh(multi_pod=True)
+    d, m = (int(x) for x in mesh_kind.split("x"))
+    return jax.make_mesh((d, m), ("data", "model"))
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             overrides: Optional[Dict[str, str]] = None,
+             tag: str = "baseline", save: bool = True,
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = _apply_overrides(cfg, overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+        "overrides": overrides or {},
+    }
+    if not ok:
+        record["status"] = "skipped"
+        record["reason"] = why
+        if verbose:
+            print(f"[skip] {arch} x {shape_name}: {why}")
+        if save:
+            _save(record)
+        return record
+
+    mesh = _make_mesh(mesh_kind)
+    chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, specs = build_cell(cfg, shape, mesh)
+            lowered = fn.lower(*specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo_text = compiled.as_text()
+    except Exception as e:
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {mesh_kind}: "
+                  f"{record['error'][:300]}")
+        if save:
+            _save(record)
+        return record
+
+    mem_gb = None
+    if mem is not None:
+        per_dev = (getattr(mem, "argument_size_in_bytes", 0)
+                   + getattr(mem, "temp_size_in_bytes", 0)
+                   + getattr(mem, "output_size_in_bytes", 0)
+                   - getattr(mem, "alias_size_in_bytes", 0))
+        mem_gb = per_dev / 1e9
+        record["memory_analysis"] = {
+            "argument_gb": getattr(mem, "argument_size_in_bytes", 0) / 1e9,
+            "temp_gb": getattr(mem, "temp_size_in_bytes", 0) / 1e9,
+            "output_gb": getattr(mem, "output_size_in_bytes", 0) / 1e9,
+            "alias_gb": getattr(mem, "alias_size_in_bytes", 0) / 1e9,
+            "total_live_gb": mem_gb,
+        }
+
+    costs_raw = hlo_mod.analyze_hlo(hlo_text, mesh.devices.shape,
+                                    mesh.axis_names,
+                                    default_trip=cfg.n_repeats)
+    # XLA CPU float-normalizes bf16->f32; correct bytes back to the TPU
+    # target dtype (raw numbers are recorded alongside).
+    costs = costs_raw.bf16_corrected() if cfg.dtype == "bfloat16" \
+        else costs_raw
+    terms = roofline.terms_from_hlo(arch, shape, mesh_kind, chips, costs,
+                                    cfg, memory_per_dev_gb=mem_gb)
+    record.update({
+        "status": "ok",
+        "chips": chips,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "cost_analysis_raw": {k: float(v) for k, v in (cost or {}).items()
+                              if isinstance(v, (int, float))
+                              and k in ("flops", "bytes accessed")},
+        "hlo": {
+            "flops_per_dev": costs.flops,
+            "bytes_per_dev": costs.bytes,
+            "bytes_per_dev_raw_f32normalized": costs_raw.bytes,
+            "collective_bytes_by_axis": costs.collective_bytes_by_axis,
+            "collective_bytes_raw": costs_raw.collective_bytes,
+            "collective_count": costs.collective_count,
+            "while_trips": costs.while_trips,
+        },
+        "roofline": dataclasses.asdict(terms),
+    })
+    if verbose:
+        print(f"[ok] {arch} x {shape_name} x {mesh_kind} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s) "
+              f"mem/dev={mem_gb if mem_gb is None else round(mem_gb, 2)}GB")
+        print(f"     compute {terms.compute_s*1e3:.2f}ms "
+              f"memory {terms.memory_s*1e3:.2f}ms "
+              f"collective {terms.collective_s*1e3:.2f}ms "
+              f"-> {terms.bottleneck}-bound, useful={terms.useful_ratio:.2f}")
+    if save:
+        _save(record)
+    return record
+
+
+def _save(record: Dict[str, Any]) -> None:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    tag = record.get("tag", "baseline")
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}__{tag}.json"
+    (OUT_DIR / name).write_text(json.dumps(record, indent=1, default=float))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    help="single | multipod | both | DxM (e.g. 32x8)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override k=v (e.g. remat=none)")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.set) or None
+
+    meshes = ["single", "multipod"] if args.mesh == "both" else [args.mesh]
+    archs = sorted(ARCHS) if args.all or args.arch is None else [args.arch]
+    shapes = sorted(SHAPES) if args.all or args.shape is None \
+        else [args.shape]
+
+    failures = 0
+    for m in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_cell(a, s, m, overrides=overrides, tag=args.tag)
+                failures += rec["status"] == "error"
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

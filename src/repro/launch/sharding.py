@@ -1,0 +1,210 @@
+"""Sharding rules: parameter/optimizer/cache PartitionSpecs for any arch.
+
+Scheme (MaxText-style 2-D "fsdp + tensor" sharding):
+  * batch dims  -> ("pod", "data")        (pod is extra data parallelism)
+  * TP dims     -> "model" (heads, d_ff, experts, mamba inner, vocab)
+  * FSDP dims   -> "data" (the non-TP axis of every large weight)
+Optimizer state inherits the parameter specs (ZeRO-1 by construction).
+
+Head counts that do not divide the model axis (qwen3's 40 heads, rwkv's 40
+heads, whisper's 8) still shard — GSPMD pads uneven dims; the padding waste
+is noted in EXPERIMENTS.md.  Expert counts shard on "model" only when they
+divide it (EP); otherwise experts stay replicated and their FFN widths go
+tensor-parallel.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from .mesh import axis_size, data_axes
+
+
+def _div(n: int, mesh, axis: str) -> bool:
+    return n % axis_size(mesh, axis) == 0
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               cfg: ModelConfig, mesh) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path."""
+    names = [str(p) for p in path]
+    name = names[-1]
+    stacked = "layers" in names or name in ("enc_layers", "dec_layers") or \
+        ("enc_layers" in names or "dec_layers" in names)
+    fsdp = "data" if cfg.fsdp_params else None
+    model = "model"
+    in_moe = any(n in ("wi_gate", "wi_up", "wo") for n in names[-1:]) and \
+        any(n == "mlp" or n == "shared" for n in names) and cfg.moe is not None
+
+    def v_axis(V: int) -> Optional[str]:
+        return model if (cfg.shard_vocab and _div(V, mesh, model)) else None
+
+    base: Optional[Tuple] = None
+    dims = len(shape) - (1 if stacked else 0)
+    core = shape[1:] if stacked else shape
+
+    if name in ("embed", "embed_out"):
+        base = (v_axis(core[0]), fsdp)
+    elif name == "lm_head":
+        base = (fsdp, v_axis(core[1]))
+    elif name in ("adapter", "frontend"):
+        base = (None, model)
+    elif name in ("scale", "bias", "w_base", "dt_bias", "D", "conv_b",
+                  "ln_out") or name.startswith("mu_"):
+        base = (model,) if (dims == 1 and _div(core[0], mesh, model)
+                            and core[0] >= 256) else (None,) * dims
+    elif name == "wq":
+        # shard heads when divisible, else head_dim (always /16 across archs)
+        h_ok = _div(core[1], mesh, model)
+        base = (fsdp, model, None) if h_ok else (fsdp, None, model)
+    elif name in ("wk", "wv") and dims == 3:
+        h_ok = _div(core[1], mesh, model)
+        base = (fsdp, model, None) if h_ok else (fsdp, None, model)
+    elif name == "wo" and dims == 3 and not in_moe:
+        h_ok = _div(core[0], mesh, model)
+        base = (model, None, fsdp) if h_ok else (None, model, fsdp)
+    elif name in ("bq", "bk", "bv"):
+        h_ok = _div(core[0], mesh, model)
+        base = (model, None) if h_ok else (None, model)
+    elif name in ("q_norm", "k_norm"):
+        base = (None,)
+    elif name == "u":
+        base = (model, None)
+    elif name == "router":
+        base = (None, None)
+    elif name in ("wi_gate", "wi_up") and dims == 3:  # moe experts (E, d, ef)
+        ep = _div(core[0], mesh, model)
+        base = (model, fsdp, None) if ep else (None, fsdp, model)
+    elif name == "wo" and dims == 3:                  # moe (E, ef, d)
+        ep = _div(core[0], mesh, model)
+        base = (model, None, fsdp) if ep else (None, model, fsdp)
+    elif name in ("wi_gate", "wi_up", "wi", "wk") and dims == 2:
+        base = (fsdp, model)
+    elif name in ("wo", "wv") and dims == 2:
+        base = (model, fsdp)
+    elif name in ("wr", "wg") and dims == 2:          # rwkv square proj
+        base = (fsdp, model)
+    elif name == "w_A":
+        base = (fsdp, None)
+    elif name == "w_B":
+        base = (None, model)
+    elif name == "in_proj":
+        base = (fsdp, model)
+    elif name == "conv_w":
+        base = (None, model)
+    elif name == "x_proj":
+        base = (model, None)
+    elif name == "dt_proj":
+        base = (None, model)
+    elif name == "A_log":
+        base = (model, None)
+    elif name == "out_proj":
+        base = (model, fsdp)
+    if base is None:
+        base = (None,) * dims
+
+    # Guard: jit in_shardings require exact divisibility — drop any axis the
+    # mesh cannot divide evenly (GSPMD padding is not allowed on arguments).
+    checked = []
+    for ax, n in zip(base, core):
+        checked.append(ax if (ax is not None and _div(n, mesh, ax))
+                       else None)
+    base = tuple(checked)
+    return P(*(((None,) + base) if stacked else base))
+
+
+def param_shardings(params_spec_tree: Any, cfg: ModelConfig, mesh):
+    """NamedShardings matching a params (or eval_shape'd params) pytree."""
+    def one(path, leaf):
+        keys = tuple(getattr(p, "key", getattr(p, "idx", p)) for p in path)
+        return NamedSharding(mesh, param_spec(keys, leaf.shape, cfg, mesh))
+    return jax.tree_util.tree_map_with_path(one, params_spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_spec: Dict[str, Any], cfg: ModelConfig, mesh,
+                    shape: ShapeConfig):
+    """Input shardings for a train/prefill batch dict."""
+    dp = data_axes(mesh)
+    seq_ax = None
+    if shape.global_batch % int(np.prod([axis_size(mesh, a)
+                                         for a in dp])) != 0:
+        # batch==1 long-context: shard sequence instead (SP)
+        dp, seq_ax = (), "data"
+
+    def spec(k, leaf):
+        nd = len(leaf.shape)
+        if k == "positions":          # (3, B, S)
+            return P(None, dp or None, seq_ax)
+        if k == "cache":
+            return None
+        lead = dp or None
+        if nd == 2:                   # tokens/labels (B, S)
+            return P(lead, seq_ax)
+        if nd == 3:                   # embeds (B, S, d)
+            return P(lead, seq_ax, None)
+        return P(*([None] * nd))
+
+    out = {}
+    for k, v in batch_spec.items():
+        out[k] = jax.tree.map(
+            lambda leaf, kk=k: NamedSharding(mesh, spec(kk, leaf)), v)
+    return out
+
+
+def cache_shardings(cache_spec: Any, cfg: ModelConfig, mesh,
+                    shape: ShapeConfig):
+    """Decode-cache shardings.
+
+    Regular decode: batch over (pod,data), kv-heads over model (padded when
+    uneven).  long-context batch=1 decode: sequence-parallel — the KV cache
+    S axis shards over "data" (flash-decode with logsumexp combine happens
+    inside XLA's partitioned softmax; see DESIGN.md SP notes).
+    """
+    dp = data_axes(mesh)
+    n_dp = int(np.prod([axis_size(mesh, a) for a in dp]))
+    sp = shape.global_batch % n_dp != 0  # can't shard batch -> shard seq
+
+    def spec(path, leaf):
+        names = [str(getattr(p, "key", p)) for p in path]
+        name = names[-1]
+        nd = len(leaf.shape)
+        stacked = "layers" in names or "self" in names or \
+            name.startswith("cross")
+        lead = (None,) if stacked else ()
+        core = leaf.shape[1:] if stacked else leaf.shape
+
+        def ax_div(dim_idx: int, ax: str):
+            return ax if _div(core[dim_idx], mesh, ax) else None
+
+        if name in ("k", "v") or name.startswith("cross"):
+            # (B, S, KV, hd): kv-heads over model when divisible, else hd
+            kv_ax = ax_div(2, "model")
+            hd_ax = None if kv_ax else ax_div(3, "model")
+            if sp:  # batch=1 long context: sequence-parallel cache
+                return P(*lead, None, ax_div(1, "data"), kv_ax, hd_ax)
+            b_ax = dp if core[0] % n_dp == 0 else None
+            return P(*lead, b_ax or None, None, kv_ax, hd_ax)
+        b = None if sp else ((dp if core[0] % n_dp == 0 else None) or None)
+        if name == "state":      # rwkv (B, H, n, n)
+            h_ax = ax_div(1, "model")
+            n_ax = None if h_ax else ax_div(2, "model")
+            return P(*lead, b, h_ax, n_ax, None)
+        if name == "ssm":        # mamba (B, di, ds)
+            return P(*lead, b, ax_div(1, "model"), None)
+        if name == "conv":       # mamba (B, dc-1, di)
+            return P(*lead, b, None, ax_div(2, "model"))
+        if name == "x_prev":
+            return P(*lead, b, *([None] * (len(core) - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, spec(p, l)), cache_spec)

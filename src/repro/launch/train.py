@@ -1,0 +1,186 @@
+"""Training driver: mesh + sharded train step + checkpoint/restart loop.
+
+Runs end-to-end on one CPU device (examples, tests) and lowers/compiles for
+the production meshes (dry-run).  Fault tolerance: step-granular checkpoints
+carrying the data cursor, heartbeats into the LSM manifest, and an elastic
+supervisor that decides restart/remesh on failure (see elastic.py).
+
+CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b \
+          --reduced --steps 50 --ckpt-dir /tmp/ck --mesh 1x1
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import DataConfig, DataState, shard_batch_at
+from repro.models import build_model
+from repro.optim import adamw
+from .mesh import make_mesh
+from .sharding import batch_shardings, param_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 50
+    ckpt_interval: int = 20
+    lr: float = 3e-4
+    warmup: int = 10
+    seed: int = 0
+    aux_weight: float = 0.01
+    grad_compression: str = "none"  # none|int8 (pod-axis mean)
+    log_interval: int = 10
+
+
+def make_train_step(api, opt_cfg: adamw.AdamWConfig, cfg: ModelConfig):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = adamw.update(grads, opt_state, params,
+                                             opt_cfg)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    return step
+
+
+def jit_train_step(api, opt_cfg, mesh, shape: ShapeConfig):
+    cfg = api.cfg
+    step = make_train_step(api, opt_cfg, cfg)
+    pspecs = api.param_specs()
+    pshard = param_shardings(pspecs, cfg, mesh)
+    ostate_spec = jax.eval_shape(adamw.init, pspecs)
+    oshard = adamw.AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=param_shardings(ostate_spec.mu, cfg, mesh),
+        nu=param_shardings(ostate_spec.nu, cfg, mesh))
+    bshard = batch_shardings(api.input_specs(shape), cfg, mesh, shape)
+    return jax.jit(step,
+                   in_shardings=(pshard, oshard, bshard),
+                   out_shardings=(pshard, oshard, None),
+                   donate_argnums=(0, 1)), pshard, oshard, bshard
+
+
+def train_loop(arch: str, reduced: bool, steps: int, mesh_shape=(1, 1),
+               ckpt_dir: Optional[str] = None, resume: bool = False,
+               seq_len: int = 64, global_batch: int = 8,
+               tc: TrainConfig = TrainConfig(), worker: int = 0,
+               num_workers: int = 1) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    api = build_model(cfg)
+    mesh = make_mesh(mesh_shape, ("data", "model"))
+    shape = ShapeConfig("train_cli", seq_len, global_batch, "train")
+    opt_cfg = adamw.AdamWConfig(
+        lr=tc.lr, schedule=adamw.cosine_schedule(tc.warmup, steps))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                      global_batch=global_batch, seed=tc.seed)
+
+    with mesh:
+        jstep, pshard, oshard, bshard = jit_train_step(api, opt_cfg, mesh,
+                                                       shape)
+        store = None
+        data_state = DataState()
+        if ckpt_dir is not None:
+            from repro.checkpoint.store import CheckpointStore
+            store = CheckpointStore.create(
+                ckpt_dir, ckpt_interval=tc.ckpt_interval)
+        if resume and store is not None and store.latest_step() is not None:
+            pspecs = api.param_specs()
+            params, meta = store.restore(pspecs, shardings=pshard)
+            opt_state = store.restore_opt_state(
+                jax.eval_shape(adamw.init, pspecs))
+            opt_state = jax.device_put(opt_state, oshard)
+            data_state = DataState.from_dict(meta["data_state"])
+            start = int(meta["step"]) + 1
+        else:
+            params = jax.jit(api.init, out_shardings=pshard)(
+                jax.random.PRNGKey(tc.seed))
+            opt_state = jax.jit(adamw.init, out_shardings=oshard)(params)
+            start = 0
+
+        losses = []
+        t_start = time.time()
+        for s in range(start, steps):
+            batch_np = shard_batch_at(dcfg, data_state.step, 0, 1)
+            batch = _prep_batch(batch_np, api, bshard)
+            t0 = time.time()
+            params, opt_state, metrics = jstep(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            data_state.step += 1
+            if store is not None:
+                store.heartbeat(worker, s, time.time())
+                if (s + 1) % tc.ckpt_interval == 0 or s == steps - 1:
+                    store.save(s, params, opt_state,
+                               data_state=data_state.to_dict())
+            if s % tc.log_interval == 0 or s == steps - 1:
+                print(f"step {s:5d} loss {loss:8.4f} "
+                      f"gnorm {float(metrics['grad_norm']):7.3f} "
+                      f"({time.time()-t0:.2f}s)")
+        wall = time.time() - t_start
+        return {"losses": losses, "params": params, "opt_state": opt_state,
+                "wall": wall, "api": api, "store": store}
+
+
+def _prep_batch(batch_np: Dict[str, np.ndarray], api, bshard):
+    cfg = api.cfg
+    batch: Dict[str, Any] = {}
+    if cfg.encoder is not None:
+        B, S = batch_np["tokens"].shape
+        d_in = cfg.encoder.d_input or cfg.d_model
+        rng = np.random.default_rng(int(batch_np["tokens"][0, 0]) + 17)
+        batch["embeds"] = rng.normal(size=(B, S, d_in)).astype(np.float32)
+        batch["tokens"] = batch_np["tokens"]
+        batch["labels"] = batch_np["labels"]
+    elif cfg.embed_inputs:
+        batch = dict(batch_np)
+    else:
+        B, S = batch_np["tokens"].shape
+        rng = np.random.default_rng(int(batch_np["tokens"][0, 0]) + 17)
+        batch["embeds"] = rng.normal(size=(B, S, cfg.d_model)).astype(
+            np.float32)
+        if cfg.mrope_sections is not None:
+            base = np.broadcast_to(np.arange(S)[None], (B, S))
+            batch["positions"] = np.broadcast_to(base[None],
+                                                 (3, B, S)).astype(np.int32)
+        batch["labels"] = batch_np["labels"]
+    return jax.tree.map(
+        lambda a, s: jax.device_put(jnp.asarray(a), s), batch, bshard)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--mesh", default="1x1", help="DATAxMODEL, e.g. 1x1")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    d, m = (int(x) for x in args.mesh.split("x"))
+    out = train_loop(args.arch, args.reduced, args.steps,
+                     mesh_shape=(d, m), ckpt_dir=args.ckpt_dir,
+                     resume=args.resume, seq_len=args.seq_len,
+                     global_batch=args.global_batch)
+    print(f"final loss {out['losses'][-1]:.4f}  wall {out['wall']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Executable LSM-tree storage engine with exact logical-I/O accounting."""
+
+from .bloom import BloomFilter, monkey_bits_per_key
+from .engine import EngineConfig, IOStats, LSMTree, TOMBSTONE
+from .workload_runner import (SessionResult, measured_cost_vector, populate,
+                              run_session)
+
+__all__ = ["BloomFilter", "monkey_bits_per_key", "EngineConfig", "IOStats",
+           "LSMTree", "TOMBSTONE", "SessionResult", "measured_cost_vector",
+           "populate", "run_session"]

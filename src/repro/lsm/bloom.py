@@ -1,0 +1,82 @@
+"""Bloom filters with Monkey-style per-level memory allocation.
+
+Vectorized numpy implementation: build hashes all keys at once; probes are
+O(k) bit tests.  Hashing is splitmix64 with per-hash-function seeds, the same
+scheme the Pallas ``bloom_probe`` kernel mirrors (kernels/bloom_probe).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+_SPLITMIX_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+
+
+def splitmix64(x: np.ndarray, seed: np.uint64) -> np.ndarray:
+    """Deterministic 64-bit mix; operates elementwise on uint64 arrays."""
+    with np.errstate(over="ignore"):
+        z = (x + seed * _SPLITMIX_GAMMA).astype(np.uint64)
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return z ^ (z >> np.uint64(31))
+
+
+class BloomFilter:
+    """Standard Bloom filter over uint64 keys.
+
+    ``bits_per_key`` chooses the optimal number of hash functions
+    k = bits_per_key * ln 2 (Section 4.1 assumes the optimum)."""
+
+    __slots__ = ("n_bits", "k", "words", "n_keys")
+
+    def __init__(self, keys: np.ndarray, bits_per_key: float):
+        keys = np.asarray(keys, np.uint64)
+        self.n_keys = len(keys)
+        n_bits = max(64, int(math.ceil(bits_per_key * max(self.n_keys, 1))))
+        self.n_bits = n_bits
+        self.k = max(1, int(round(bits_per_key * math.log(2))))
+        words = np.zeros((n_bits + 63) // 64, np.uint64)
+        if self.n_keys:
+            for j in range(self.k):
+                h = splitmix64(keys, np.uint64(j + 1)) % np.uint64(n_bits)
+                np.bitwise_or.at(words, (h >> np.uint64(6)).astype(np.int64),
+                                 np.uint64(1) << (h & np.uint64(63)))
+        self.words = words
+
+    def might_contain(self, key: int) -> bool:
+        key_arr = np.asarray([key], np.uint64)
+        for j in range(self.k):
+            h = int(splitmix64(key_arr, np.uint64(j + 1))[0] % self.n_bits)
+            if not (int(self.words[h >> 6]) >> (h & 63)) & 1:
+                return False
+        return True
+
+    def might_contain_batch(self, keys: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys, np.uint64)
+        out = np.ones(len(keys), bool)
+        for j in range(self.k):
+            h = splitmix64(keys, np.uint64(j + 1)) % np.uint64(self.n_bits)
+            bit = (self.words[(h >> np.uint64(6)).astype(np.int64)]
+                   >> (h & np.uint64(63))) & np.uint64(1)
+            out &= bit.astype(bool)
+        return out
+
+    @property
+    def bits_used(self) -> int:
+        return self.n_bits
+
+
+def monkey_bits_per_key(level: int, num_levels: int, T: float,
+                        mfilt_bits: float, N: float) -> float:
+    """Invert Eq. 3: level-i FPR -> bits/key = -ln(f_i) / ln(2)^2, floored at 0.
+
+    f_i(T) = T^{T/(T-1)} / T^{L+1-i} * exp(-(m_filt/N) ln(2)^2)
+    """
+    ln2sq = math.log(2) ** 2
+    log_f = ((T / (T - 1.0)) * math.log(T)
+             - (num_levels + 1.0 - level) * math.log(T)
+             - (mfilt_bits / N) * ln2sq)
+    log_f = min(log_f, 0.0)
+    return max(0.0, -log_f / ln2sq)

@@ -1,0 +1,104 @@
+"""Execute uncertainty-benchmark workload sessions against the LSM engine.
+
+Mirrors the paper's Section 9.2 experiment design at CPU-testable scale:
+the database is initialized with N unique keys; each session executes a
+sampled workload (z0, z1, q, w mix) for a fixed number of queries, measuring
+average I/Os per query with compaction I/O amortized over writes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .engine import EngineConfig, IOStats, LSMTree
+
+
+@dataclasses.dataclass
+class SessionResult:
+    workload: np.ndarray
+    queries: int
+    avg_io_per_query: float
+    io: IOStats
+
+    @property
+    def throughput(self) -> float:
+        return 1.0 / max(self.avg_io_per_query, 1e-9)
+
+
+def populate(tree: LSMTree, n: int, seed: int = 7,
+             key_space: int = 2 ** 48) -> np.ndarray:
+    """Insert n unique random keys; returns the key array (for z1 queries)."""
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(key_space, size=n, replace=False).astype(np.uint64)
+    for k in keys:
+        tree.put(int(k), int(k) % 997)
+    tree.flush()
+    # Population writes/compactions are setup cost, not workload cost.
+    tree.stats = IOStats()
+    return keys
+
+
+def run_session(tree: LSMTree, existing_keys: np.ndarray, w: np.ndarray,
+                n_queries: int = 2000, seed: int = 0,
+                key_space: int = 2 ** 48,
+                range_fraction: float = 2e-5,
+                f_a: float = 1.0, f_seq: float = 1.0,
+                zipf_a: Optional[float] = None) -> SessionResult:
+    """Run one workload session; returns measured avg I/O per query.
+
+    ``w`` = (z0, z1, q, w) proportions. Non-empty reads sample keys known to
+    exist (optionally Zipfian-ranked, Section 9.3 "Workload Skew"); empty
+    reads sample the same domain but miss; range queries use a small span
+    (short ranges); writes insert fresh keys.
+    """
+    rng = np.random.default_rng(seed)
+    w = np.asarray(w, np.float64)
+    w = w / w.sum()
+    kinds = rng.choice(4, size=n_queries, p=w)
+    before = tree.stats.snapshot()
+    span = max(1, int(range_fraction * key_space))
+    existing = np.asarray(existing_keys, np.uint64)
+    fresh = iter(rng.choice(key_space, size=max((kinds == 3).sum(), 1) + 8,
+                            replace=False).astype(np.uint64))
+    for kind in kinds:
+        if kind == 0:        # empty point read: perturb to near-certain miss
+            k = int(rng.integers(0, key_space)) | (1 << 60)
+            tree.point_query(k)
+        elif kind == 1:      # non-empty point read
+            if zipf_a is not None:
+                idx = min(len(existing) - 1, rng.zipf(zipf_a) - 1)
+            else:
+                idx = int(rng.integers(0, len(existing)))
+            tree.point_query(int(existing[idx]))
+        elif kind == 2:      # short range query
+            lo = int(rng.integers(0, key_space - span))
+            tree.range_query(lo, lo + span)
+        else:                # write
+            tree.put(int(next(fresh)), 1)
+    delta = tree.stats.minus(before)
+    n = delta.queries
+    reads_io = delta.random_reads + f_seq * delta.seq_reads
+    write_io = f_seq * (delta.comp_pages_read + f_a * delta.comp_pages_written)
+    total_io = reads_io + write_io
+    avg = total_io / max(n_queries, 1)
+    return SessionResult(workload=w, queries=n_queries, avg_io_per_query=avg,
+                         io=delta)
+
+
+def measured_cost_vector(tree_factory, n_keys: int, n_queries: int = 2000,
+                         seed: int = 0) -> np.ndarray:
+    """Measure per-class I/O costs (z0, z1, q, w) with pure sessions.
+
+    Used to validate the analytic cost vector c(Phi) component-wise."""
+    out = []
+    pure = np.eye(4) * 0.97 + 0.01
+    for i in range(4):
+        tree = tree_factory()
+        keys = populate(tree, n_keys, seed=seed)
+        res = run_session(tree, keys, pure[i], n_queries=n_queries,
+                          seed=seed + i)
+        out.append(res.avg_io_per_query)
+    return np.asarray(out)

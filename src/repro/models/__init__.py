@@ -1,0 +1,5 @@
+"""Model zoo: dense/MoE/SSM/hybrid/enc-dec backbones as pure functions."""
+
+from .model import ModelAPI, build_model
+
+__all__ = ["ModelAPI", "build_model"]

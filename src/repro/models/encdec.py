@@ -1,0 +1,178 @@
+"""Encoder-decoder backbone (Whisper-style; conv/audio frontend stubbed).
+
+The encoder consumes precomputed frame embeddings (the conv frontend is a
+stub per the assignment — ``input_specs()`` supplies (B, S, d_input) float
+arrays) and applies bidirectional attention blocks.  The decoder is a causal
+LM with cross-attention to the encoder output; decode shapes run the decoder
+step with a self-attn KV cache plus precomputed cross-attention K/V.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import (apply_mlp, apply_norm, attention_cross, attention_decode,
+                     attention_full, init_attention, init_mlp, init_norm,
+                     _project_qkv, _sdpa)
+
+Params = Dict[str, Any]
+
+
+def _init_enc_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"norm1": init_norm(cfg), "attn": init_attention(k1, cfg),
+            "norm2": init_norm(cfg), "mlp": init_mlp(k2, cfg)}
+
+
+def _init_dec_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": init_norm(cfg), "self_attn": init_attention(k1, cfg),
+            "norm_x": init_norm(cfg), "cross_attn": init_attention(k2, cfg,
+                                                                   cross=True),
+            "norm2": init_norm(cfg), "mlp": init_mlp(k3, cfg)}
+
+
+def init_encdec(key: jax.Array, cfg: ModelConfig) -> Params:
+    enc = cfg.encoder
+    d_in = enc.d_input or cfg.d_model
+    keys = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Params = {
+        "frontend": (jax.random.normal(keys[0], (d_in, cfg.d_model))
+                     / math.sqrt(d_in)).astype(dt),
+        "embed": (jax.random.normal(keys[1], (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(dt),
+        "enc_final_norm": init_norm(cfg),
+        "final_norm": init_norm(cfg),
+    }
+    enc_keys = jax.random.split(keys[2], enc.num_layers)
+    p["enc_layers"] = jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys)
+    dec_keys = jax.random.split(keys[3], cfg.num_layers)
+    p["dec_layers"] = jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(keys[4],
+                                          (cfg.d_model, cfg.vocab_size))
+                        / math.sqrt(cfg.d_model)).astype(dt)
+    return p
+
+
+def encode(params: Params, embeds: jnp.ndarray, cfg: ModelConfig
+           ) -> jnp.ndarray:
+    """embeds: (B, S_enc, d_input) stub frame embeddings -> (B, S_enc, d)."""
+    x = (embeds @ params["frontend"]).astype(jnp.dtype(cfg.dtype))
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, p):
+        h = apply_norm(p["norm1"], x, cfg)
+        y, _ = attention_full(p["attn"], h, positions, cfg, causal=False)
+        x = x + y
+        h = apply_norm(p["norm2"], x, cfg)
+        return x + apply_mlp(p["mlp"], h, cfg), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(params["enc_final_norm"], x, cfg)
+
+
+def _dec_block(p: Params, x, cfg: ModelConfig, mode: str, enc=None,
+               cache=None, pos=None, positions=None):
+    new_cache: Params = {}
+    h = apply_norm(p["norm1"], x, cfg)
+    if mode == "decode":
+        y, new_cache["self"] = attention_decode(p["self_attn"], h, pos,
+                                                cache["self"], cfg)
+    else:
+        y, new_cache["self"] = attention_full(p["self_attn"], h, positions,
+                                              cfg)
+    x = x + y
+    h = apply_norm(p["norm_x"], x, cfg)
+    if mode == "decode":
+        # cross K/V precomputed at prefill time
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cross_attn"]["wq"])
+        y = _sdpa(q, cache["cross_k"], cache["cross_v"], None, cfg)
+        y = jnp.einsum("bshk,hkd->bsd", y, p["cross_attn"]["wo"])
+        new_cache["cross_k"] = cache["cross_k"]
+        new_cache["cross_v"] = cache["cross_v"]
+    else:
+        y = attention_cross(p["cross_attn"], h, enc, cfg)
+        new_cache["cross_k"] = jnp.einsum("bsd,dhk->bshk", enc,
+                                          p["cross_attn"]["wk"])
+        new_cache["cross_v"] = jnp.einsum("bsd,dhk->bshk", enc,
+                                          p["cross_attn"]["wv"])
+    x = x + y
+    h = apply_norm(p["norm2"], x, cfg)
+    return x + apply_mlp(p["mlp"], h, cfg), new_cache
+
+
+def decode_stack(params: Params, x, cfg: ModelConfig, mode: str, enc=None,
+                 cache=None, pos=None):
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, xs):
+        p = xs[0]
+        c = xs[1] if cache is not None else None
+        x, nc = _dec_block(p, x, cfg, mode, enc=enc, cache=c, pos=pos,
+                           positions=positions)
+        return x, nc
+
+    if mode == "train" and cfg.remat != "none":
+        body = jax.checkpoint(body)
+    xs = (params["dec_layers"],) if cache is None else (params["dec_layers"],
+                                                        cache)
+    x, new_cache = jax.lax.scan(body, x, xs)
+    return apply_norm(params["final_norm"], x, cfg), new_cache
+
+
+def _unembed(params: Params, cfg: ModelConfig):
+    return params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+
+
+def encdec_loss(params: Params, batch: Dict[str, jnp.ndarray],
+                cfg: ModelConfig, aux_weight: float = 0.0):
+    from .lm import softmax_xent
+    enc = encode(params, batch["embeds"], cfg)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(
+        jnp.dtype(cfg.dtype))
+    x, _ = decode_stack(params, x, cfg, "train", enc=enc)
+    xent = softmax_xent(x, _unembed(params, cfg), batch["labels"], cfg)
+    return xent, {"xent": xent, "aux": jnp.zeros((), jnp.float32)}
+
+
+def encdec_prefill(params: Params, batch: Dict[str, jnp.ndarray],
+                   cfg: ModelConfig):
+    enc = encode(params, batch["embeds"], cfg)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(
+        jnp.dtype(cfg.dtype))
+    x, cache = decode_stack(params, x, cfg, "prefill", enc=enc)
+    logits = (x[:, -1:] @ _unembed(params, cfg)).astype(jnp.float32)
+    return logits, cache
+
+
+def encdec_decode_step(params: Params, cache, tokens: jnp.ndarray,
+                       pos: jnp.ndarray, cfg: ModelConfig):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x, new_cache = decode_stack(params, x, cfg, "decode", cache=cache,
+                                pos=pos)
+    logits = (x @ _unembed(params, cfg)).astype(jnp.float32)
+    return logits, new_cache
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                      enc_seq: int) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    L = cfg.num_layers
+    return {
+        "self": {"k": jnp.zeros((L, batch, max_seq, KV, hd), dtype),
+                 "v": jnp.zeros((L, batch, max_seq, KV, hd), dtype)},
+        "cross_k": jnp.zeros((L, batch, enc_seq, KV, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, enc_seq, KV, hd), dtype),
+    }

@@ -1,0 +1,328 @@
+"""Core layers: norms, RoPE (incl. partial + M-RoPE), GQA attention
+(causal / sliding-window / qk-norm / QKV-bias), and dense MLPs.
+
+Pure-functional: every layer is ``apply(params, x, ...)`` with params as
+nested dicts of arrays; ``init_*`` builds matching param trees.  Attention
+supports three modes: full sequence (train/prefill, returns a KV cache) and
+single-token decode against a cache.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.utils.shard_hints import hint
+
+Params = Dict[str, Any]
+NEG_INF = -1e30  # bf16-safe large-negative for masking
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.dtype(cfg.param_dtype))}
+    if cfg.norm == "ln":
+        p["bias"] = jnp.zeros((d,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "ln":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rms
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale: jnp.ndarray, x: jnp.ndarray,
+                  eps: float) -> jnp.ndarray:
+    """Per-head q/k RMSNorm (Qwen3 qk_norm); x: (..., head_dim)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings: standard, partial, and M-RoPE
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig
+               ) -> jnp.ndarray:
+    """x: (B, S, n_heads, head_dim); positions: (B, S) or (3, B, S) for
+    M-RoPE (t/h/w position triples, Qwen2-VL)."""
+    hd = x.shape[-1]
+    rot = int(hd * cfg.rotary_pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    freqs = _rope_freqs(rot, cfg.rope_theta)  # (rot/2,)
+
+    if cfg.mrope_sections is not None and positions.ndim == 3:
+        # M-RoPE: split the rot/2 frequency channels into (t, h, w) sections,
+        # each rotated by its own position stream.
+        sec = cfg.mrope_sections
+        assert sum(sec) == rot // 2, (sec, rot)
+        angle_parts = []
+        start = 0
+        for axis, n in enumerate(sec):
+            f = freqs[start:start + n]
+            angle_parts.append(positions[axis][..., None].astype(jnp.float32)
+                               * f)  # (B, S, n)
+            start += n
+        angles = jnp.concatenate(angle_parts, axis=-1)  # (B, S, rot/2)
+    else:
+        pos = positions if positions.ndim == 2 else positions[0]
+        angles = pos[..., None].astype(jnp.float32) * freqs  # (B, S, rot/2)
+
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, rot/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x_rot[..., ::2], x_rot[..., 1::2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    x_rot = jnp.stack([xr1, xr2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([x_rot.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key: jax.Array, cfg: ModelConfig,
+                   cross: bool = False) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(H * hd)
+    p = {
+        "wq": (jax.random.normal(k1, (d, H, hd)) * scale_in).astype(dt),
+        "wk": (jax.random.normal(k2, (d, KV, hd)) * scale_in).astype(dt),
+        "wv": (jax.random.normal(k3, (d, KV, hd)) * scale_in).astype(dt),
+        "wo": (jax.random.normal(k4, (H, hd, d)) * scale_out).astype(dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((KV, hd), dt)
+        p["bv"] = jnp.zeros((KV, hd), dt)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _project_qkv(p: Params, xq: jnp.ndarray, xkv: jnp.ndarray,
+                 cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if "q_norm" in p:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    q = hint(q, "batch", "seq", "heads", "head_dim")
+    k = hint(k, "batch", "seq", "kv_heads", "head_dim")
+    v = hint(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _repeat_kv(k: jnp.ndarray, G: int) -> jnp.ndarray:
+    """(B, S, KV, hd) -> (B, S, KV*G, hd), heads grouped by kv head.
+
+    Standard TPU GQA pattern: expanding replicated/under-sharded KV heads to
+    the full head count keeps the attention einsums cleanly head-parallel
+    under tensor parallelism (the expansion is a broadcast, ~free)."""
+    if G == 1:
+        return k
+    B, S, KV, hd = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, G, hd))
+    return k.reshape(B, S, KV * G, hd)
+
+
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          mask: Optional[jnp.ndarray], cfg: ModelConfig) -> jnp.ndarray:
+    """Grouped-query scaled-dot-product attention.
+
+    q: (B, Sq, H, hd), k/v: (B, Sk, KV, hd). H = KV * G.
+    mask: broadcastable to (B, 1, Sq, Sk) additive, or None.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    k = hint(_repeat_kv(k, G), "batch", "kv_seq", "heads", "head_dim")
+    v = hint(_repeat_kv(v, G), "batch", "kv_seq", "heads", "head_dim")
+    q = q * (1.0 / math.sqrt(hd))
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+    if mask is not None:
+        scores = scores + mask
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    return out
+
+
+def causal_mask(Sq: int, Sk: int, window: Optional[int],
+                offset: int = 0) -> jnp.ndarray:
+    """Additive causal (+ sliding window) mask of shape (1,1,1,Sq,Sk).
+    ``offset``: absolute position of query row 0 (prefill starts at 0)."""
+    qpos = jnp.arange(Sq)[:, None] + offset
+    kpos = jnp.arange(Sk)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF)[None, None]
+
+
+def _chunked_sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  cfg: ModelConfig, causal: bool, q_chunk: int
+                  ) -> jnp.ndarray:
+    """Attention with the q axis processed in chunks under lax.scan.
+
+    Perf iteration #2 (EXPERIMENTS.md): the plain path materializes the full
+    (B, H, S, S) f32 score tensor — 343 GB/device for qwen3 prefill_32k
+    (40 heads do not divide the 16-way model axis, so scores shard on batch
+    only).  Chunking bounds the transient to (B, H, q_chunk, S) and the
+    scan's known_trip_count keeps the roofline accounting exact."""
+    B, S, H, hd = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    k = hint(_repeat_kv(k, G), "batch", "kv_seq", "heads", "head_dim")
+    v = hint(_repeat_kv(v, G), "batch", "kv_seq", "heads", "head_dim")
+    nq = S // q_chunk
+    qc = jnp.moveaxis(q.reshape(B, nq, q_chunk, H, hd), 1, 0)
+    scale = 1.0 / math.sqrt(hd)
+
+    def body(_, xs):
+        q_i, idx = xs
+        s = jnp.einsum("bqhd,bshd->bhqs", q_i * scale,
+                       k).astype(jnp.float32)
+        if causal or cfg.window is not None:
+            qpos = idx * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = jnp.arange(Sk)[None, :]
+            ok = kpos <= qpos if causal else jnp.ones_like(kpos > 0)
+            if cfg.window is not None:
+                ok &= kpos > qpos - cfg.window
+            s = jnp.where(ok[None, None], s, NEG_INF)
+        p_ = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return 0, jnp.einsum("bhqs,bshd->bqhd", p_, v)
+
+    _, outs = jax.lax.scan(body, 0, (qc, jnp.arange(nq)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+def attention_full(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                   cfg: ModelConfig, causal: bool = True
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence attention (train/prefill). Returns (out, kv_cache)."""
+    q, k, v = _project_qkv(p, x, x, cfg)
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+    S = x.shape[1]
+    if cfg.attention_impl == "pallas":
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=causal, window=cfg.window)
+    elif cfg.attention_impl == "xla_chunked" and S % cfg.q_chunk == 0 \
+            and S > cfg.q_chunk:
+        out = _chunked_sdpa(q, k, v, cfg, causal, cfg.q_chunk)
+    else:
+        mask = causal_mask(S, S, cfg.window) if causal else None
+        out = _sdpa(q, k, v, mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k, "v": v}
+
+
+def attention_decode(p: Params, x: jnp.ndarray, pos: jnp.ndarray,
+                     cache: Dict[str, jnp.ndarray], cfg: ModelConfig
+                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode. x: (B, 1, d); cache k/v: (B, Smax, KV, hd);
+    pos: scalar int32 — index of the new token."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+    q, k_new, v_new = _project_qkv(p, x, x, cfg)
+    q = apply_rope(q, positions, cfg)
+    k_new = apply_rope(k_new, positions, cfg)
+    Smax = cache["k"].shape[1]
+    # Sliding-window caches are ring buffers of `window` slots: slot = pos %
+    # Smax.  RoPE is relative, so keys keep their absolute-position rotation
+    # and only validity masking is needed.
+    ring = cfg.window is not None and Smax <= cfg.window
+    slot = pos % Smax if ring else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    kpos = jnp.arange(Smax)
+    if ring:
+        ok = (kpos <= pos) | (pos + 1 >= Smax)  # warm ring: all slots valid
+    else:
+        ok = kpos <= pos
+        if cfg.window is not None:
+            ok &= kpos > pos - cfg.window
+    mask = jnp.where(ok, 0.0, NEG_INF)[None, None, None, :]
+    out = _sdpa(q, k, v, mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k, "v": v}
+
+
+def attention_cross(p: Params, x: jnp.ndarray, enc: jnp.ndarray,
+                    cfg: ModelConfig) -> jnp.ndarray:
+    """Cross-attention (whisper decoder): no RoPE, no mask."""
+    q, k, v = _project_qkv(p, x, enc, cfg)
+    out = _sdpa(q, k, v, None, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, cfg: ModelConfig,
+             d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    si, so = 1.0 / math.sqrt(d), 1.0 / math.sqrt(ff)
+    if cfg.act == "swiglu":
+        return {
+            "wi_gate": (jax.random.normal(k1, (d, ff)) * si).astype(dt),
+            "wi_up": (jax.random.normal(k2, (d, ff)) * si).astype(dt),
+            "wo": (jax.random.normal(k3, (ff, d)) * so).astype(dt),
+        }
+    return {
+        "wi": (jax.random.normal(k1, (d, ff)) * si).astype(dt),
+        "wo": (jax.random.normal(k3, (ff, d)) * so).astype(dt),
+    }
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if "wi_gate" in p:
+        g = jax.nn.silu(hint(x @ p["wi_gate"], "batch", "seq", "mlp"))
+        u = hint(x @ p["wi_up"], "batch", "seq", "mlp")
+        return (g * u) @ p["wo"]
+    h = hint(x @ p["wi"], "batch", "seq", "mlp")
+    return jax.nn.gelu(h) @ p["wo"]

@@ -1,0 +1,359 @@
+"""Decoder-only LM assembly: pattern-based blocks, scan-over-layers, KV/state
+caches, and the train/prefill/decode entry points.
+
+Layer structure is driven by ``cfg.pattern`` — a tuple of (mixer, mlp) kinds
+repeated ``n_repeats`` times and executed under a single ``lax.scan`` over
+stacked parameters (plus optional unstacked ``prelude`` layers).  This keeps
+the HLO small for 80-layer models and — by construction — makes the layer
+stack the *only* while loop in the program, which utils/hlo.py relies on for
+roofline accounting.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.utils.shard_hints import hint
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from .layers import (apply_mlp, apply_norm, attention_decode, attention_full,
+                     init_attention, init_mlp, init_norm)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Single block (mixer + channel-mlp with pre-norms and residuals)
+# ---------------------------------------------------------------------------
+
+def init_block(key: jax.Array, kind: Tuple[str, str],
+               cfg: ModelConfig) -> Params:
+    mixer, mlp = kind
+    k1, k2 = jax.random.split(key)
+    p: Params = {"norm1": init_norm(cfg), "norm2": init_norm(cfg)}
+    if mixer == "attn":
+        p["mixer"] = init_attention(k1, cfg)
+    elif mixer == "mamba":
+        p["mixer"] = mamba_mod.init_mamba(k1, cfg)
+    elif mixer == "rwkv":
+        p["mixer"] = rwkv_mod.init_time_mix(k1, cfg)
+    else:
+        raise ValueError(mixer)
+    if mlp == "dense":
+        p["mlp"] = init_mlp(k2, cfg)
+    elif mlp == "moe":
+        p["mlp"] = moe_mod.init_moe(k2, cfg)
+    elif mlp == "rwkv_ffn":
+        p["mlp"] = rwkv_mod.init_channel_mix(k2, cfg)
+    else:
+        raise ValueError(mlp)
+    return p
+
+
+def block_cache_init(kind: Tuple[str, str], cfg: ModelConfig, batch: int,
+                     max_seq: int, dtype) -> Params:
+    """Concrete zero-initialized decode cache for one block."""
+    mixer, mlp = kind
+    cache: Params = {}
+    if mixer == "attn":
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        # Sliding-window archs keep a ring buffer of `window` slots: the KV
+        # cache for a 500k context is bounded by the window (Mixtral SWA).
+        S = min(max_seq, cfg.window) if cfg.window is not None else max_seq
+        cache["mixer"] = {
+            "k": jnp.zeros((batch, S, KV, hd), dtype),
+            "v": jnp.zeros((batch, S, KV, hd), dtype),
+        }
+    elif mixer == "mamba":
+        di, ds, dc = cfg.d_inner_mamba, cfg.mamba_d_state, cfg.mamba_d_conv
+        cache["mixer"] = {
+            "conv": jnp.zeros((batch, dc - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, ds), jnp.float32),
+        }
+    elif mixer == "rwkv":
+        n = cfg.rwkv_head_dim
+        H = cfg.d_model // n
+        cache["mixer"] = {
+            "state": jnp.zeros((batch, H, n, n), jnp.float32),
+            "x_prev": jnp.zeros((batch, cfg.d_model), dtype),
+        }
+    if mlp == "rwkv_ffn":
+        cache["mlp"] = {"x_prev": jnp.zeros((batch, cfg.d_model), dtype)}
+    return cache
+
+
+def apply_block(p: Params, x: jnp.ndarray, kind: Tuple[str, str],
+                cfg: ModelConfig, mode: str,
+                cache: Optional[Params] = None,
+                pos: Optional[jnp.ndarray] = None,
+                positions: Optional[jnp.ndarray] = None):
+    """Returns (x, new_cache, aux_loss)."""
+    mixer, mlp = kind
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Params = {}
+
+    h = apply_norm(p["norm1"], x, cfg)
+    if mixer == "attn":
+        if mode == "decode":
+            y, new_cache["mixer"] = attention_decode(
+                p["mixer"], h, pos, cache["mixer"], cfg)
+        else:
+            y, kv = attention_full(p["mixer"], h, positions, cfg)
+            new_cache["mixer"] = kv
+    elif mixer == "mamba":
+        if mode == "decode":
+            y, new_cache["mixer"] = mamba_mod.mamba_step(
+                p["mixer"], h, cache["mixer"], cfg)
+        else:
+            y, new_cache["mixer"] = mamba_mod.mamba_full(p["mixer"], h, cfg)
+    elif mixer == "rwkv":
+        if mode == "decode":
+            y, new_cache["mixer"] = rwkv_mod.time_mix_step(
+                p["mixer"], h, cache["mixer"], cfg)
+        else:
+            y, new_cache["mixer"] = rwkv_mod.time_mix_full(p["mixer"], h, cfg)
+    else:
+        raise ValueError(mixer)
+    x = hint(x + y, "batch", "seq", "embed")
+
+    h2 = apply_norm(p["norm2"], x, cfg)
+    if mlp == "dense":
+        y2 = apply_mlp(p["mlp"], h2, cfg)
+    elif mlp == "moe":
+        y2, aux = moe_mod.apply_moe(p["mlp"], h2, cfg)
+    elif mlp == "rwkv_ffn":
+        if mode == "decode":
+            y2, new_cache["mlp"] = rwkv_mod.channel_mix_step(
+                p["mlp"], h2, cache["mlp"], cfg)
+        else:
+            y2, new_cache["mlp"] = rwkv_mod.channel_mix_full(p["mlp"], h2, cfg)
+    else:
+        raise ValueError(mlp)
+    x = hint(x + y2, "batch", "seq", "embed")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model params
+# ---------------------------------------------------------------------------
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Params = {}
+    if cfg.embed_inputs:
+        p["embed"] = (jax.random.normal(keys[0],
+                                        (cfg.vocab_size, cfg.d_model))
+                      * 0.02).astype(dt)
+    else:
+        # stub modality frontend: a linear adapter over precomputed embeddings
+        d_in = cfg.d_model
+        p["adapter"] = (jax.random.normal(keys[0], (d_in, cfg.d_model))
+                        / jnp.sqrt(d_in)).astype(dt)
+        p["embed_out"] = (jax.random.normal(keys[5],
+                                            (cfg.vocab_size, cfg.d_model))
+                          * 0.02).astype(dt)
+
+    p["prelude"] = [init_block(k, kind, cfg) for k, kind in
+                    zip(jax.random.split(keys[1], max(len(cfg.prelude), 1)),
+                        cfg.prelude)]
+
+    n_rep = cfg.n_repeats
+    group: Params = {}
+    for j, kind in enumerate(cfg.pattern):
+        sub_keys = jax.random.split(jax.random.fold_in(keys[2], j), n_rep)
+        group[f"sub{j}"] = jax.vmap(
+            lambda k, kind=kind: init_block(k, kind, cfg))(sub_keys)
+    p["layers"] = group
+
+    p["final_norm"] = init_norm(cfg)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(keys[3],
+                                          (cfg.d_model, cfg.vocab_size))
+                        / jnp.sqrt(cfg.d_model)).astype(dt)
+    return p
+
+
+def _unembed_matrix(params: Params, cfg: ModelConfig) -> jnp.ndarray:
+    if not cfg.tie_embeddings:
+        return params["lm_head"]
+    emb = params.get("embed", params.get("embed_out"))
+    return emb.T
+
+
+# ---------------------------------------------------------------------------
+# Stack application
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def apply_stack(params: Params, x: jnp.ndarray, cfg: ModelConfig, mode: str,
+                cache: Optional[Params] = None,
+                pos: Optional[jnp.ndarray] = None,
+                positions: Optional[jnp.ndarray] = None):
+    """Prelude layers + scanned pattern groups.
+
+    cache layout: {"prelude": [block caches], "layers": {subj: stacked}}.
+    Returns (x, new_cache, total_aux).
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Params = {"prelude": [], "layers": {}}
+
+    for i, kind in enumerate(cfg.prelude):
+        c = cache["prelude"][i] if cache is not None else None
+        x, nc, aux = apply_block(params["prelude"][i], x, kind, cfg, mode,
+                                 c, pos, positions)
+        new_cache["prelude"].append(nc)
+        aux_total = aux_total + aux
+
+    def group_body(carry, xs):
+        x, aux_acc = carry
+        p_grp = xs[0]
+        c_grp = xs[1] if cache is not None else None
+        nc_grp = {}
+        for j, kind in enumerate(cfg.pattern):
+            c = c_grp[f"sub{j}"] if c_grp is not None else None
+            x, nc, aux = apply_block(p_grp[f"sub{j}"], x, kind, cfg, mode,
+                                     c, pos, positions)
+            nc_grp[f"sub{j}"] = nc
+            aux_acc = aux_acc + aux
+        return (x, aux_acc), nc_grp
+
+    body = group_body
+    if mode == "train":
+        body = _remat(group_body, cfg)
+
+    xs = (params["layers"],) if cache is None else (params["layers"],
+                                                    cache["layers"])
+    (x, aux_total), nc_layers = jax.lax.scan(
+        body, (x, aux_total), xs, unroll=cfg.scan_unroll)
+    new_cache["layers"] = nc_layers
+    return x, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+# ---------------------------------------------------------------------------
+
+def softmax_xent(h: jnp.ndarray, unembed: jnp.ndarray, labels: jnp.ndarray,
+                 cfg: ModelConfig) -> jnp.ndarray:
+    """Mean next-token cross entropy. ``cfg.logits_chunk`` > 0 computes the
+    logsumexp over vocab chunks (python loop — stays while-free) to avoid
+    materializing (B, S, V) in one piece."""
+    B, S, d = h.shape
+    V = unembed.shape[1]
+    chunk = cfg.logits_chunk
+    if chunk <= 0 or chunk >= V:
+        logits = hint((h @ unembed).astype(jnp.float32),
+                      "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None],
+                                 axis=-1)[..., 0]
+        return jnp.mean(lse - ll)
+
+    n_chunks = -(-V // chunk)
+    m = jnp.full((B, S), -jnp.inf, jnp.float32)
+    s = jnp.zeros((B, S), jnp.float32)
+    ll = jnp.zeros((B, S), jnp.float32)
+    for i in range(n_chunks):
+        lo = i * chunk
+        w = unembed[:, lo:lo + chunk]
+        lg = hint((h @ w).astype(jnp.float32), "batch", "seq", None)
+        m_new = jnp.maximum(m, lg.max(-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(lg - m_new[..., None]).sum(-1)
+        m = m_new
+        in_chunk = (labels >= lo) & (labels < lo + w.shape[1])
+        idx = jnp.clip(labels - lo, 0, w.shape[1] - 1)
+        ll = ll + jnp.where(
+            in_chunk, jnp.take_along_axis(lg, idx[..., None], -1)[..., 0],
+            0.0)
+    lse = m + jnp.log(s)
+    return jnp.mean(lse - ll)
+
+
+def embed_tokens(params: Params, batch: Dict[str, jnp.ndarray],
+                 cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (x, positions). Handles token inputs and stub-embedding inputs."""
+    if cfg.embed_inputs:
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(
+            jnp.dtype(cfg.dtype))
+        B, S = tokens.shape
+    else:
+        x = (batch["embeds"] @ params["adapter"]).astype(jnp.dtype(cfg.dtype))
+        B, S = x.shape[:2]
+    x = hint(x, "batch", "seq", "embed")
+    if cfg.mrope_sections is not None:
+        positions = batch.get("positions")
+        if positions is None:
+            base = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            positions = jnp.broadcast_to(base[None], (3, B, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return x, positions
+
+
+def lm_loss(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            aux_weight: float = 0.01):
+    """Training loss (+ metrics). batch: tokens/embeds + labels (B, S)."""
+    x, positions = embed_tokens(params, batch, cfg)
+    x, _, aux = apply_stack(params, x, cfg, "train", positions=positions)
+    x = apply_norm(params["final_norm"], x, cfg)
+    xent = softmax_xent(x, _unembed_matrix(params, cfg), batch["labels"], cfg)
+    loss = xent + aux_weight * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+def lm_prefill(params: Params, batch: Dict[str, jnp.ndarray],
+               cfg: ModelConfig):
+    """Full forward returning (last-position logits, cache)."""
+    x, positions = embed_tokens(params, batch, cfg)
+    x, cache, _ = apply_stack(params, x, cfg, "prefill", positions=positions)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = (x[:, -1:] @ _unembed_matrix(params, cfg)).astype(jnp.float32)
+    return logits, cache
+
+
+def lm_decode_step(params: Params, cache: Params, tokens: jnp.ndarray,
+                   pos: jnp.ndarray, cfg: ModelConfig):
+    """One decode step. tokens: (B, 1) int32 (or embeds (B,1,d) for stub
+    frontends); pos: scalar int32. Returns (logits (B,1,V), new cache)."""
+    if cfg.embed_inputs:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(
+            jnp.dtype(cfg.dtype))
+    else:
+        x = (tokens @ params["adapter"]).astype(jnp.dtype(cfg.dtype))
+    x, new_cache, _ = apply_stack(params, x, cfg, "decode", cache=cache,
+                                  pos=pos)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = (x @ _unembed_matrix(params, cfg)).astype(jnp.float32)
+    return logits, new_cache
+
+
+def lm_init_cache(params_or_none, cfg: ModelConfig, batch: int, max_seq: int
+                  ) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    cache: Params = {
+        "prelude": [block_cache_init(kind, cfg, batch, max_seq, dtype)
+                    for kind in cfg.prelude],
+        "layers": {},
+    }
+    n_rep = cfg.n_repeats
+    for j, kind in enumerate(cfg.pattern):
+        one = block_cache_init(kind, cfg, batch, max_seq, dtype)
+        cache["layers"][f"sub{j}"] = jax.tree.map(
+            lambda a: jnp.zeros((n_rep,) + a.shape, a.dtype), one)
+    return cache

@@ -1,0 +1,164 @@
+"""Mamba (selective SSM) block, for the Jamba hybrid architecture.
+
+Diagonal selective state space:  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t,
+y_t = C_t . h_t + D x_t, with input-dependent (dt, B, C).  The time dimension
+uses ``jax.lax.associative_scan`` (log-depth, while-loop free — see the
+roofline accounting note in utils/hlo.py); decode carries (conv window, ssm
+state) explicitly.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.utils.shard_hints import hint
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner_mamba
+    ds = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dt_rank = max(1, d // 16)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di))
+                    / math.sqrt(d)).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": (jax.random.normal(ks[2], (di, dt_rank + 2 * ds))
+                   / math.sqrt(di)).astype(dt),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, di))
+                    / math.sqrt(dt_rank)).astype(dt),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus ~ 0.01
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (di, d))
+                     / math.sqrt(di)).astype(dt),
+    }
+
+
+def _ssm_inputs(p: Params, xz: jnp.ndarray, cfg: ModelConfig):
+    """Common projections. xz: (B, S, 2*di) -> (x_conv_in, z, dt, Bm, Cm)."""
+    di = cfg.d_inner_mamba
+    ds = cfg.mamba_d_state
+    x, z = xz[..., :di], xz[..., di:]
+    return x, z
+
+
+def _selective(p: Params, xc: jnp.ndarray, cfg: ModelConfig):
+    """From conv output xc (B,S,di): dt (B,S,di), A (di,ds), B/C (B,S,ds)."""
+    ds = cfg.mamba_d_state
+    dt_rank = p["dt_proj"].shape[0]
+    proj = xc @ p["x_proj"]
+    dt_in, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus((dt_in @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"])             # (B,S,di)
+    A = -jnp.exp(p["A_log"])                          # (di,ds), negative
+    return dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _ssm_scan_chunked(a: jnp.ndarray, b: jnp.ndarray,
+                      chunk: int) -> jnp.ndarray:
+    """First-order linear recurrence h_t = a_t h_{t-1} + b_t over time.
+
+    Perf iteration #3 (EXPERIMENTS.md): a single associative_scan over the
+    full sequence materializes O(S * di * ds) f32 at every tree level
+    (~TB-scale transients for jamba train_4k).  Chunking runs the
+    associative scan *within* ``chunk``-sized blocks and carries the state
+    across blocks under lax.scan (known_trip_count keeps the roofline
+    accounting exact).  a/b: (B, S, di, ds) -> h: (B, S, di, ds)."""
+    B, S, di, ds = a.shape
+    if S <= chunk:
+        def combine(u, v):
+            a1, b1 = u
+            a2, b2 = v
+            return a1 * a2, b2 + a2 * b1
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        return h
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    ar = jnp.moveaxis(a.reshape(B, nc, chunk, di, ds), 1, 0)
+    br = jnp.moveaxis(b.reshape(B, nc, chunk, di, ds), 1, 0)
+
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a1 * a2, b2 + a2 * b1
+
+    def body(h0, xs):
+        ai, bi = xs
+        aa, hh = jax.lax.associative_scan(combine, (ai, bi), axis=1)
+        h = hh + aa * h0[:, None]       # fold in the carried state
+        return h[:, -1], h
+
+    _, hs = jax.lax.scan(body, jnp.zeros((B, di, ds), a.dtype), (ar, br))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, di, ds)
+
+
+def mamba_full(p: Params, x: jnp.ndarray, cfg: ModelConfig
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence Mamba (train/prefill). Returns (out, decode cache)."""
+    B, S, d = x.shape
+    di = cfg.d_inner_mamba
+    dc = cfg.mamba_d_conv
+    xz = hint(x @ p["in_proj"], "batch", "seq", "mlp")
+    xi, z = _ssm_inputs(p, xz, cfg)
+
+    # depthwise causal conv1d over time
+    pad = jnp.zeros((B, dc - 1, di), xi.dtype)
+    xpad = jnp.concatenate([pad, xi], axis=1)
+    xc = sum(xpad[:, i:i + S, :] * p["conv_w"][i] for i in range(dc))
+    xc = hint(jax.nn.silu(xc + p["conv_b"]), "batch", "seq", "mlp")
+
+    dt, A, Bm, Cm = _selective(p, xc, cfg)
+    # discretize: a_t = exp(dt*A) (B,S,di,ds); b_t = dt*B_t*x_t
+    xf = xc.astype(jnp.float32)
+    a = jnp.exp(dt[..., None] * A)                    # (B,S,di,ds)
+    b = (dt * xf)[..., None] * Bm[..., None, :]       # (B,S,di,ds)
+    h = _ssm_scan_chunked(a, b, min(cfg.mamba_chunk, S))
+    y = jnp.einsum("bsnz,bsz->bsn", h, Cm)            # h.C  (B,S,di)
+    y = y + p["D"] * xf
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    cache = {
+        "conv": xpad[:, -(dc - 1):, :] if dc > 1 else
+        jnp.zeros((B, 0, di), xi.dtype),
+        "ssm": h[:, -1],                              # (B,di,ds)
+    }
+    return out, cache
+
+
+def mamba_step(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+               cfg: ModelConfig
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Decode step; x: (B, 1, d)."""
+    B, _, d = x.shape
+    di = cfg.d_inner_mamba
+    dc = cfg.mamba_d_conv
+    xz = x @ p["in_proj"]
+    xi, z = _ssm_inputs(p, xz, cfg)
+
+    window = jnp.concatenate([cache["conv"], xi], axis=1)  # (B,dc,di)
+    xc = sum(window[:, i, :] * p["conv_w"][i] for i in range(dc))
+    xc = jax.nn.silu(xc + p["conv_b"])[:, None, :]         # (B,1,di)
+
+    dt, A, Bm, Cm = _selective(p, xc, cfg)
+    xf = xc.astype(jnp.float32)
+    a = jnp.exp(dt[:, 0, :, None] * A)                     # (B,di,ds)
+    b = (dt[:, 0] * xf[:, 0])[..., None] * Bm[:, 0, None, :]
+    h = a * cache["ssm"] + b                               # (B,di,ds)
+    y = jnp.einsum("bnz,bz->bn", h, Cm[:, 0])
+    y = y + p["D"] * xf[:, 0]
+    y = (y[:, None, :].astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"conv": window[:, 1:, :], "ssm": h}

@@ -1,0 +1,97 @@
+"""Unified model API: build any assigned architecture from its config.
+
+``build_model(cfg)`` returns a :class:`ModelAPI` with pure functions for
+init / train-loss / prefill / decode plus ``input_specs`` producing
+``ShapeDtypeStruct`` stand-ins for the dry-run (weak-type-correct, shardable,
+no device allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import encdec as encdec_mod
+from . import lm as lm_mod
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Params]
+    loss_fn: Callable[[Params, Dict[str, jnp.ndarray]], Any]
+    prefill: Callable[[Params, Dict[str, jnp.ndarray]], Any]
+    decode_step: Callable[[Params, Params, jnp.ndarray, jnp.ndarray], Any]
+    init_cache: Callable[[int, int], Params]
+
+    # ------------------------------------------------------------- specs
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct inputs for one (arch x shape) cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        f = partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+        d = cfg.d_model
+        emb_dt = jnp.dtype(cfg.dtype)
+
+        if shape.kind in ("train", "prefill"):
+            batch: Dict[str, Any] = {}
+            if cfg.encoder is not None:
+                d_in = cfg.encoder.d_input or d
+                batch["embeds"] = jax.ShapeDtypeStruct((B, S, d_in), emb_dt)
+                batch["tokens"] = f((B, S))
+            elif cfg.embed_inputs:
+                batch["tokens"] = f((B, S))
+            else:
+                batch["embeds"] = jax.ShapeDtypeStruct((B, S, d), emb_dt)
+                if cfg.mrope_sections is not None:
+                    batch["positions"] = f((3, B, S))
+            if shape.kind == "train":
+                batch["labels"] = f((B, S))
+            return batch
+
+        # decode: one new token against a cache of S past positions
+        cache = jax.eval_shape(lambda: self.init_cache(B, S))
+        if cfg.embed_inputs or cfg.encoder is not None:
+            tokens = f((B, 1))
+        else:
+            tokens = jax.ShapeDtypeStruct((B, 1, d), emb_dt)
+        return {"cache": cache, "tokens": tokens,
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def param_specs(self) -> Params:
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.encoder is not None:
+        def init_cache(batch: int, max_seq: int) -> Params:
+            return encdec_mod.encdec_init_cache(cfg, batch, max_seq,
+                                                enc_seq=max_seq)
+
+        return ModelAPI(
+            cfg=cfg,
+            init=partial(encdec_mod.init_encdec, cfg=cfg),
+            loss_fn=partial(encdec_mod.encdec_loss, cfg=cfg),
+            prefill=partial(encdec_mod.encdec_prefill, cfg=cfg),
+            decode_step=partial(encdec_mod.encdec_decode_step, cfg=cfg),
+            init_cache=init_cache,
+        )
+
+    def init_cache(batch: int, max_seq: int) -> Params:
+        return lm_mod.lm_init_cache(None, cfg, batch, max_seq)
+
+    return ModelAPI(
+        cfg=cfg,
+        init=partial(lm_mod.init_lm, cfg=cfg),
+        loss_fn=partial(lm_mod.lm_loss, cfg=cfg),
+        prefill=partial(lm_mod.lm_prefill, cfg=cfg),
+        decode_step=partial(lm_mod.lm_decode_step, cfg=cfg),
+        init_cache=init_cache,
+    )

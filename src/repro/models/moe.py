@@ -1,0 +1,140 @@
+"""Mixture-of-Experts layer with sort-based top-k dispatch.
+
+Capacity-bounded, fully vectorized, shardable: expert weights carry a leading
+``num_experts`` axis that the mesh rules place on the ``model`` axis when the
+expert count divides it (expert parallelism); otherwise experts stay
+replicated and the FFN widths are tensor-parallel.
+
+Supports DeepSeek-MoE-style *shared experts* (always-on dense path) and
+returns the standard load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.utils.shard_hints import hint
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> Params:
+    m = cfg.moe
+    d, E, ef = cfg.d_model, m.num_experts, m.d_expert
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    si, so = 1.0 / math.sqrt(d), 1.0 / math.sqrt(ef)
+    p = {
+        "router": (jax.random.normal(k1, (d, E)) * si).astype(jnp.float32),
+        "wi_gate": (jax.random.normal(k2, (E, d, ef)) * si).astype(dt),
+        "wi_up": (jax.random.normal(k3, (E, d, ef)) * si).astype(dt),
+        "wo": (jax.random.normal(k4, (E, ef, d)) * so).astype(dt),
+    }
+    if m.num_shared > 0:
+        sf = m.num_shared * ef
+        ks1, ks2, ks3 = jax.random.split(k5, 3)
+        p["shared"] = {
+            "wi_gate": (jax.random.normal(ks1, (d, sf)) * si).astype(dt),
+            "wi_up": (jax.random.normal(ks2, (d, sf)) * si).astype(dt),
+            "wo": (jax.random.normal(ks3, (sf, d)) * so).astype(dt),
+        }
+    return p
+
+
+def _dispatch_group(xt: jnp.ndarray, eidx: jnp.ndarray, gate: jnp.ndarray,
+                    E: int, cap: int):
+    """Per-group sort-based dispatch.  xt: (T, d); eidx/gate: (T, k).
+
+    Returns (buf (E, cap, d), combine metadata) — pure per-group math so
+    the caller can vmap it over batch groups, keeping the group axis
+    sharded over the data axes (no global token buffer)."""
+    T, d = xt.shape
+    k = eidx.shape[1]
+    e_flat = eidx.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(T), k)
+    gate_flat = gate.reshape(-1)
+
+    order = jnp.argsort(e_flat)                       # stable
+    e_sort = e_flat[order]
+    tok_sort = tok_flat[order]
+    gate_sort = gate_flat[order]
+
+    counts = jnp.bincount(e_flat, length=E)
+    starts = jnp.cumsum(counts) - counts              # exclusive
+    pos = jnp.arange(T * k) - starts[e_sort]          # slot within expert
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, 0)
+    gate_sort = jnp.where(keep, gate_sort, 0.0)
+
+    buf = jnp.zeros((E, cap, d), xt.dtype)
+    buf = buf.at[e_sort, pos_c].add(
+        jnp.where(keep[:, None], xt[tok_sort], 0.0))
+    return buf, (e_sort, pos_c, tok_sort, gate_sort, keep)
+
+
+def _combine_group(eout: jnp.ndarray, meta, T: int) -> jnp.ndarray:
+    e_sort, pos_c, tok_sort, gate_sort, keep = meta
+    y_sort = eout[e_sort, pos_c] * gate_sort[:, None].astype(eout.dtype)
+    return jnp.zeros((T, eout.shape[-1]), eout.dtype).at[tok_sort].add(
+        jnp.where(keep[:, None], y_sort, 0.0))
+
+
+def apply_moe(p: Params, x: jnp.ndarray, cfg: ModelConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    GROUPED dispatch (perf iteration #1, see EXPERIMENTS.md): tokens are
+    dispatched *within their batch row*, producing (B, E, cap_row, d)
+    buffers whose leading axis stays sharded over the data axes.  The
+    original flat-token formulation built one global (E, Nt*k*cf/E, d)
+    buffer that SPMD could not shard on its token axis -> it replicated
+    ~126 GB/device and serialized dispatch through cross-device scatters.
+    Expert parallelism then happens purely in the (g e c d) x (e d f)
+    einsums (all-to-all over the model axis when E divides it).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+
+    logits = (x.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))          # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                   # (B, S, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch/Mixtral style), over all tokens.
+    pe = probs.reshape(-1, E).mean(axis=0)
+    fe = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(
+        1.0 / (B * S * k))
+    aux = E * jnp.sum(pe * fe)
+
+    cap = max(1, int(math.ceil(S * k / E * m.capacity_factor)))
+
+    buf, meta = jax.vmap(
+        lambda xr, er, gr: _dispatch_group(xr, er, gr, E, cap))(
+            x, eidx, gate)                                 # (B, E, cap, d)
+    buf = hint(buf, "batch", "expert", "capacity", "embed")
+
+    # Batched expert FFN: (B, E, C, d) x (E, d, ef) -> (B, E, C, ef)
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["wi_gate"]))
+    u = jnp.einsum("becd,edf->becf", buf, p["wi_up"])
+    g = hint(g, "batch", "expert", "capacity", "expert_mlp")
+    u = hint(u, "batch", "expert", "capacity", "expert_mlp")
+    eout = hint(jnp.einsum("becf,efd->becd", g * u, p["wo"]),
+                "batch", "expert", "capacity", "embed")    # (B, E, C, d)
+
+    out = jax.vmap(lambda eo, me: _combine_group(eo, me, S))(eout, meta)
+    out = hint(out, "batch", "seq", "embed")
+
+    if m.num_shared > 0:
+        sp = p["shared"]
+        sg = jax.nn.silu(hint(x @ sp["wi_gate"], "batch", "seq", "mlp")) \
+            * hint(x @ sp["wi_up"], "batch", "seq", "mlp")
+        out = out + sg @ sp["wo"]
+
+    return out, aux

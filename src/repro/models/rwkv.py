@@ -1,0 +1,246 @@
+"""RWKV-6 ("Finch") blocks: time-mix with data-dependent decay + channel-mix.
+
+The WKV recurrence per head (head dim n, per batch):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state: n x n)
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+with per-channel decay ``w_t = exp(-exp(ww_t))`` computed from the input via
+a LoRA (the paper's data-dependent decay).  Three execution paths:
+
+* ``wkv_chunked`` — train/prefill: chunkwise *matmul* form with pairwise
+  log-space decays (numerically exact, no exp overflow, while-loop free —
+  important for the roofline accounting and TPU-friendly: the inner products
+  hit the MXU).
+* ``wkv_step`` — single-token decode against a carried (n x n) state.
+* ``repro.kernels.rwkv6`` — the Pallas TPU kernel implementing the same
+  chunked algorithm (ref.py oracle == wkv_chunked here).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.utils.shard_hints import hint
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_time_mix(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    H = d // n
+    lora = cfg.rwkv_decay_lora
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    return {
+        # token-shift interpolation weights per stream
+        "mu_r": jnp.full((d,), 0.5, dt), "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt), "mu_g": jnp.full((d,), 0.5, dt),
+        "mu_w": jnp.full((d,), 0.5, dt),
+        "wr": (jax.random.normal(ks[0], (d, d)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, d)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, d)) * s).astype(dt),
+        "wg": (jax.random.normal(ks[3], (d, d)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[4], (d, d)) * s).astype(dt),
+        # data-dependent decay: ww = w_base + tanh(xw A) B
+        "w_base": jnp.full((d,), -0.6, jnp.float32),
+        "w_A": (jax.random.normal(ks[5], (d, lora)) * s).astype(dt),
+        "w_B": (jax.random.normal(ks[6], (lora, d)) *
+                (1.0 / math.sqrt(lora))).astype(dt),
+        "u": (jax.random.normal(ks[7], (H, n)) * 0.1).astype(jnp.float32),
+        "ln_out": jnp.ones((d,), dt),  # per-head group norm scale
+    }
+
+
+def _token_shift(x: jnp.ndarray, x_prev: jnp.ndarray) -> jnp.ndarray:
+    """Shifted sequence: row t sees row t-1 (x_prev seeds row 0)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _project(p: Params, x: jnp.ndarray, x_prev: jnp.ndarray,
+             cfg: ModelConfig):
+    xs = _token_shift(x, x_prev)
+
+    def lerp(mu):
+        return x + (xs - x) * mu
+
+    r = hint(lerp(p["mu_r"]) @ p["wr"], "batch", "seq", "mlp")
+    k = hint(lerp(p["mu_k"]) @ p["wk"], "batch", "seq", "mlp")
+    v = hint(lerp(p["mu_v"]) @ p["wv"], "batch", "seq", "mlp")
+    g = hint(lerp(p["mu_g"]) @ p["wg"], "batch", "seq", "mlp")
+    ww = p["w_base"] + (jnp.tanh(lerp(p["mu_w"]) @ p["w_A"])
+                        @ p["w_B"]).astype(jnp.float32)
+    logw = -jnp.exp(ww)  # per-channel log decay, always < 0
+    return r, k, v, g, logw
+
+
+def _heads(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    B, S, d = x.shape
+    return x.reshape(B, S, d // n, n)
+
+
+def wkv_chunked(r, k, v, logw, u, chunk: int = 32):
+    """Chunkwise-parallel WKV. All inputs (B, S, H, n) except u (H, n).
+
+    Within a chunk, pairwise decay products are formed in log space
+    (exponents always <= 0 -> stable); across chunks a (B, H, n, n) state is
+    carried with the chunk's total decay.  Output (B, S, H, n), float32.
+    """
+    B, S, H, n = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    C = S // chunk
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(B, C, chunk, H, n)
+    kc = k.astype(f32).reshape(B, C, chunk, H, n)
+    vc = v.astype(f32).reshape(B, C, chunk, H, n)
+    lw = logw.astype(f32).reshape(B, C, chunk, H, n)
+
+    # Cumulative log-decay within each chunk: Lc[t] = sum_{s<=t} logw[s].
+    Lc = jnp.cumsum(lw, axis=2)                       # (B,C,c,H,n)
+    Lc_prev = Lc - lw                                 # exclusive: sum_{s<t}
+    total = Lc[:, :, -1]                              # (B,C,H,n)
+
+    # ---- intra-chunk: y_t += sum_{j<t} (r_t . e^{Lc_{t-1}-Lc_j} k_j) v_j
+    # pairwise exponent (<=0): D[t,j] = Lc_prev[t] - Lc[j]  for j < t
+    Dexp = Lc_prev[:, :, :, None] - Lc[:, :, None]    # (B,C,c,c,H,n)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    Dexp = jnp.where(tri[None, None, :, :, None, None], Dexp, -jnp.inf)
+    att = jnp.einsum("bcthn,bcjhn,bctjhn->bctjh", rc, kc,
+                     jnp.exp(Dexp))                   # (B,C,c,c,H)
+    y_intra = jnp.einsum("bctjh,bcjhn->bcthn", att, vc)
+
+    # diagonal (current token) bonus term: (r_t . u k_t) v_t
+    diag = jnp.einsum("bcthn,hn,bcthn->bcth", rc, u.astype(f32), kc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    # ---- inter-chunk: carry state S (B,H,n,n), decayed by e^{total}
+    # chunk contribution to state: sum_j e^{total - Lc_j} k_j v_j^T
+    k_tail = kc * jnp.exp(total[:, :, None] - Lc)     # (B,C,c,H,n)
+    chunk_state = jnp.einsum("bcjhn,bcjhm->bchnm", k_tail, vc)
+
+    def body(S0, xs):
+        r_i, Lcp_i, tot_i, cs_i = xs
+        # y_t += (r_t * e^{Lc_prev,t})^T S0
+        y = jnp.einsum("bthn,bhnm->bthm", r_i * jnp.exp(Lcp_i), S0)
+        S1 = S0 * jnp.exp(tot_i)[..., None] + cs_i
+        return S1, y
+
+    xs = (jnp.moveaxis(rc, 1, 0), jnp.moveaxis(Lc_prev, 1, 0),
+          jnp.moveaxis(total, 1, 0), jnp.moveaxis(chunk_state, 1, 0))
+    S0 = jnp.zeros((B, H, n, n), f32)
+    # unroll=True: keeps the layer stack as the *only* while loop in the HLO,
+    # which the roofline accounting relies on (see utils/hlo.py); the body is
+    # just two small einsums so the HLO growth is modest.
+    S_last, y_inter = jax.lax.scan(body, S0, xs, unroll=True)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)             # (B,C,c,H,n)
+
+    y = (y_intra + y_inter).reshape(B, S, H, n)
+    return y, S_last
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """One decode step. r/k/v/logw: (B, H, n); state: (B, H, n, n)."""
+    f32 = jnp.float32
+    r, k, v, logw = (t.astype(f32) for t in (r, k, v, logw))
+    a = k[..., :, None] * v[..., None, :]             # (B,H,n,n)
+    y = jnp.einsum("bhn,bhnm->bhm", r, state + u[..., :, None] * a)
+    new_state = state * jnp.exp(logw)[..., :, None] + a
+    return y, new_state
+
+
+def _group_norm(y: jnp.ndarray, scale: jnp.ndarray, eps: float,
+                n: int) -> jnp.ndarray:
+    """Per-head normalization of the WKV output (RWKV's GroupNorm)."""
+    B = y.shape[0]
+    yh = y.reshape(*y.shape[:-1], y.shape[-1] // n, n) \
+        if y.ndim == 3 else y
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yn = (yh - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(y.shape)
+    return yn * scale.astype(yn.dtype)
+
+
+def time_mix_full(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                  chunk: int = 32
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence time-mix (train/prefill). Returns (out, state cache)."""
+    B, S, d = x.shape
+    n = cfg.rwkv_head_dim
+    x_prev0 = jnp.zeros((B, d), x.dtype)
+    r, k, v, g, logw = _project(p, x, x_prev0, cfg)
+    if cfg.attention_impl == "pallas":
+        from repro.kernels.rwkv6.ops import rwkv6_chunked as wkv_impl
+        y, S_last = wkv_impl(_heads(r, n), _heads(k, n), _heads(v, n),
+                             _heads(logw, n), p["u"], chunk=chunk)
+    else:
+        y, S_last = wkv_chunked(_heads(r, n), _heads(k, n), _heads(v, n),
+                                _heads(logw, n), p["u"], chunk=chunk)
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = _group_norm(y, p["ln_out"], cfg.norm_eps, n)
+    out = (y * jax.nn.silu(g)) @ p["wo"]
+    cache = {"state": S_last, "x_prev": x[:, -1, :]}
+    return out, cache
+
+
+def time_mix_step(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                  cfg: ModelConfig
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Decode step; x: (B, 1, d)."""
+    B, _, d = x.shape
+    n = cfg.rwkv_head_dim
+    r, k, v, g, logw = _project(p, x, cache["x_prev"], cfg)
+    H = d // n
+    rh, kh, vh, lwh = (t.reshape(B, H, n) for t in
+                       (r[:, 0], k[:, 0], v[:, 0], logw[:, 0]))
+    y, new_state = wkv_step(rh, kh, vh, lwh, p["u"], cache["state"])
+    y = y.reshape(B, 1, d).astype(x.dtype)
+    y = _group_norm(y, p["ln_out"], cfg.norm_eps, n)
+    out = (y * jax.nn.silu(g)) @ p["wo"]
+    return out, {"state": new_state, "x_prev": x[:, 0, :]}
+
+
+# ---------------------------------------------------------------------------
+# Channel mix (the RWKV FFN)
+# ---------------------------------------------------------------------------
+
+def init_channel_mix(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt), "mu_r": jnp.full((d,), 0.5, dt),
+        "wk": (jax.random.normal(k1, (d, ff)) / math.sqrt(d)).astype(dt),
+        "wv": (jax.random.normal(k2, (ff, d)) / math.sqrt(ff)).astype(dt),
+        "wr": (jax.random.normal(k3, (d, d)) / math.sqrt(d)).astype(dt),
+    }
+
+
+def channel_mix_full(p: Params, x: jnp.ndarray, cfg: ModelConfig
+                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B, S, d = x.shape
+    xs = _token_shift(x, jnp.zeros((B, d), x.dtype))
+    xk = x + (xs - x) * p["mu_k"]
+    xr = x + (xs - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return out, {"x_prev": x[:, -1, :]}
+
+
+def channel_mix_step(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                     cfg: ModelConfig
+                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    xs = cache["x_prev"][:, None, :]
+    xk = x + (xs - x) * p["mu_k"]
+    xr = x + (xs - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return out, {"x_prev": x[:, 0, :]}

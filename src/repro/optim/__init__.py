@@ -1,0 +1,5 @@
+from . import adamw, compression
+from .adamw import AdamWConfig, AdamWState, cosine_schedule
+
+__all__ = ["adamw", "compression", "AdamWConfig", "AdamWState",
+           "cosine_schedule"]

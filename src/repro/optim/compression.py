@@ -1,0 +1,127 @@
+"""Gradient compression for cross-pod reduction, with error feedback.
+
+At multi-pod scale the pod-axis all-reduce crosses the slowest links (DCN or
+inter-pod ICI).  ``compressed_psum`` quantizes gradients to int8 with a
+per-block scale before the cross-pod reduction and keeps the quantization
+residual locally ("error feedback"), which provably preserves SGD
+convergence (Karimireddy et al., 2019).  Intra-pod reduction stays full
+precision.
+
+Used by launch/train.py when ``grad_compression="int8"``; a pure function so
+it is testable numerically on CPU without a mesh (the collective is
+injected).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise symmetric int8 quantization. x: flat f32."""
+    n = x.shape[0]
+    pad = (-n) % BLOCK
+    xp = jnp.pad(x, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(xp), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray, n: int) -> jnp.ndarray:
+    x = (q.astype(jnp.float32) * scale).reshape(-1)
+    return x[:n]
+
+
+def compress_grads(grads: Any, residual: Any) -> Tuple[Any, Any, Any]:
+    """-> (quantized payloads, scales, new residuals). Leafwise int8 + EF."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        flat = gf.reshape(-1)
+        q, s = _quantize_int8(flat)
+        deq = _dequantize(q, s, flat.shape[0]).reshape(g.shape)
+        return q, s, gf - deq  # residual carries quantization error
+
+    trees = jax.tree.map(one, grads, residual)
+    is3 = lambda x: isinstance(x, tuple)
+    qs = jax.tree.map(lambda t: t[0], trees, is_leaf=is3)
+    ss = jax.tree.map(lambda t: t[1], trees, is_leaf=is3)
+    rs = jax.tree.map(lambda t: t[2], trees, is_leaf=is3)
+    return qs, ss, rs
+
+
+def decompress_grads(qs: Any, ss: Any, like: Any) -> Any:
+    def one(q, s, g):
+        return _dequantize(q, s, int(jnp.prod(jnp.array(g.shape)))
+                           if g.shape else 1).reshape(g.shape)
+
+    # shapes are static: compute element counts from the exemplar tree
+    def one_static(q, s, g):
+        n = 1
+        for d in g.shape:
+            n *= d
+        return _dequantize(q, s, n).reshape(g.shape).astype(g.dtype)
+
+    return jax.tree.map(one_static, qs, ss, like)
+
+
+def compressed_cross_pod_mean(grads: Any, residual: Any,
+                              psum_fn: Callable[[Any], Any],
+                              pmax_fn: Callable[[Any], Any],
+                              n_pods: int) -> Tuple[Any, Any]:
+    """Two-phase compressed mean across pods.
+
+    1. max-reduce the blockwise scales so all pods quantize on a COMMON grid
+       (a tiny f32 collective: numel/256 floats);
+    2. sum-reduce the int8 payloads in int32 (the big collective, 4x smaller
+       than f32 and 2x smaller than bf16 gradients);
+    3. dequantize with the common scale / n_pods -> exact mean of the
+       quantized gradients.  Per-pod quantization error stays in the local
+       error-feedback residual.
+
+    ``psum_fn`` / ``pmax_fn`` are the collectives (e.g.
+    partial(lax.psum, axis_name="pod")); injected so unit tests can run the
+    arithmetic without a mesh.
+    """
+    def local_scale(g, r):
+        gf = g.astype(jnp.float32) + r
+        flat = gf.reshape(-1)
+        pad = (-flat.shape[0]) % BLOCK
+        xp = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+        s = jnp.max(jnp.abs(xp), axis=1, keepdims=True) / 127.0
+        return jnp.maximum(s, 1e-12)
+
+    scales = pmax_fn(jax.tree.map(local_scale, grads, residual))
+
+    def quantize_common(g, r, s):
+        gf = g.astype(jnp.float32) + r
+        flat = gf.reshape(-1)
+        pad = (-flat.shape[0]) % BLOCK
+        xp = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+        q = jnp.clip(jnp.round(xp / s), -127, 127).astype(jnp.int8)
+        deq = _dequantize(q, s, flat.shape[0]).reshape(g.shape)
+        return q, gf - deq
+
+    pairs = jax.tree.map(quantize_common, grads, residual, scales)
+    is2 = lambda x: isinstance(x, tuple)
+    qs = jax.tree.map(lambda t: t[0], pairs, is_leaf=is2)
+    new_res = jax.tree.map(lambda t: t[1], pairs, is_leaf=is2)
+
+    qsum = psum_fn(jax.tree.map(lambda q: q.astype(jnp.int32), qs))
+    mean = jax.tree.map(
+        lambda q, s, g: _dequantize(q.astype(jnp.float32), s / n_pods,
+                                    _numel(g)).reshape(g.shape),
+        qsum, scales, grads)
+    return mean, new_res
+
+
+def _numel(g) -> int:
+    n = 1
+    for d in g.shape:
+        n *= d
+    return n

@@ -1,0 +1,109 @@
+"""Roofline terms for TPU v5e from compiled dry-run artifacts.
+
+Hardware constants (per chip):
+  * 197 TFLOP/s bf16 peak (MXU)
+  * 819 GB/s HBM bandwidth
+  * ~50 GB/s/link ICI (one link charged per mesh axis; conservative)
+
+All HLO-derived quantities are PER DEVICE (the compiled module is the
+per-device SPMD program), so terms are seconds-per-step directly:
+
+  compute_s    = HLO_FLOPs_per_device / 197e12
+  memory_s     = HLO_bytes_per_device / 819e9
+  collective_s = sum_axis collective_bytes_axis / 50e9
+
+MODEL_FLOPS is the analytic useful compute: 6*N*D for dense training
+(2*N*D prefill, 2*N*B_tokens decode), with N = active params for MoE.
+The ratio MODEL_FLOPS / (HLO_FLOPs * chips) exposes remat/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    collective_by_axis: Dict[str, float]
+    hlo_flops_per_dev: float
+    hlo_bytes_per_dev: float
+    model_flops_total: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs * chips)
+    bottleneck: str
+    step_time_s: float           # max of the three terms (no overlap)
+    roofline_frac: float         # compute_s / step_time_s
+    memory_per_dev_gb: Optional[float] = None
+    notes: str = ""
+
+    def row(self) -> str:
+        col = ",".join(f"{a}:{v*1e3:.2f}ms"
+                       for a, v in sorted(self.collective_by_axis.items()))
+        mem = f"{self.memory_per_dev_gb:.2f}" if self.memory_per_dev_gb \
+            else "-"
+        return (f"| {self.arch} | {self.shape} | {self.mesh} "
+                f"| {self.compute_s*1e3:.2f} | {self.memory_s*1e3:.2f} "
+                f"| {self.collective_s*1e3:.2f} ({col}) "
+                f"| **{self.bottleneck}** | {self.useful_ratio:.2f} "
+                f"| {self.roofline_frac:.2f} | {mem} |")
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic 'useful' FLOPs per step: 6ND train / 2ND prefill / 2NB
+    decode (N = active params)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def terms_from_hlo(arch: str, shape: ShapeConfig, mesh_name: str, chips: int,
+                   hlo_costs, cfg: ModelConfig,
+                   memory_per_dev_gb: Optional[float] = None,
+                   notes: str = "") -> RooflineTerms:
+    compute_s = hlo_costs.flops / PEAK_FLOPS
+    memory_s = hlo_costs.bytes / HBM_BW
+    col_by_axis = {a: b / ICI_BW
+                   for a, b in hlo_costs.collective_bytes_by_axis.items()}
+    collective_s = sum(col_by_axis.values())
+    mf = model_flops(cfg, shape)
+    useful = mf / max(hlo_costs.flops * chips, 1.0)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values())
+    return RooflineTerms(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        collective_by_axis=col_by_axis,
+        hlo_flops_per_dev=hlo_costs.flops,
+        hlo_bytes_per_dev=hlo_costs.bytes,
+        model_flops_total=mf, useful_ratio=useful,
+        bottleneck=bottleneck, step_time_s=step,
+        roofline_frac=compute_s / step if step > 0 else 0.0,
+        memory_per_dev_gb=memory_per_dev_gb, notes=notes)
+
+
+TABLE_HEADER = (
+    "| arch | shape | mesh | compute (ms) | memory (ms) "
+    "| collective (ms, by axis) | bottleneck | useful 6ND/HLO "
+    "| roofline frac | mem/dev (GB) |\n"
+    "|---|---|---|---|---|---|---|---|---|---|")

@@ -1,0 +1,112 @@
+"""Logical activation-sharding hints (MaxText-style).
+
+Models annotate activations with *logical* axis names
+(``hint(x, "batch", "seq", "heads", "head_dim")``); a context manager maps
+logical names to mesh axes per run.  Outside a mesh context (smoke tests,
+1-device examples) hints are identity, so model code stays mesh-agnostic.
+
+Rules drop axes that are absent from the ambient mesh or do not divide the
+dimension, so one rule set serves every (arch x shape x mesh) cell.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+# logical axis -> mesh axis (or tuple). The default table serves train and
+# prefill shapes; decode/long-context runs override via logical_axis_rules.
+DEFAULT_RULES: Dict[str, Axes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    # expert_mlp also maps to model: when EP applies (expert count divides
+    # the axis) the duplicate-axis guard in hint() drops it automatically,
+    # leaving EP; otherwise the expert dim drops and the FFN width is TP.
+    "expert_mlp": "model",
+    "capacity": None,
+    "flat_tokens": ("pod", "data"),
+    "state": None,
+}
+
+_local = threading.local()
+
+
+def _rules() -> Dict[str, Axes]:
+    return getattr(_local, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(overrides: Dict[str, Axes]):
+    old = _rules()
+    _local.rules = {**old, **overrides}
+    try:
+        yield
+    finally:
+        _local.rules = old
+
+
+def _current_mesh():
+    try:
+        mesh = jax._src.mesh.thread_resources.env.physical_mesh
+        if mesh.empty:
+            return None
+        return mesh
+    except Exception:
+        return None
+
+
+def hint(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply with_sharding_constraint mapping logical names to mesh axes.
+
+    No-op outside a mesh context. Axes that don't exist in the mesh or
+    don't divide the dimension are dropped (never fails)."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    if len(logical) != x.ndim:
+        return x
+    rules = _rules()
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = []
+    used: set = set()
+    for dim, name in zip(x.shape, logical):
+        ax = rules.get(name) if name is not None else None
+        if ax is None:
+            spec.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if a in names and a not in used)
+        total = int(np.prod([sizes[a] for a in axes])) if axes else 1
+        if axes and dim % total == 0:
+            spec.append(axes)
+            used.update(axes)
+        else:
+            spec.append(None)
+    spec = [s if not isinstance(s, tuple) else (s[0] if len(s) == 1 else s)
+            for s in spec]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def decode_rules(sequence_parallel: bool) -> Dict[str, Axes]:
+    """Rule overrides for decode shapes. SP (batch=1 long-context): the KV
+    sequence axis shards over 'data' (flash-decode style)."""
+    if sequence_parallel:
+        return {"batch": None, "seq": "data", "kv_seq": "data"}
+    return {"kv_seq": None}

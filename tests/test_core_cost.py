@@ -1,0 +1,135 @@
+"""Unit + property tests for the K-LSM cost model (paper Eqs. 1-9)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (DesignSpace, LSMSystem, cost_vector, expected_cost,
+                        leveling_phi, make_phi, num_levels, tiering_phi,
+                        to_phi)
+from repro.core.lsm_cost import (Phi, empty_read_cost, level_fprs, level_mask,
+                                 mbuf_bits, nonempty_read_cost, range_cost,
+                                 write_cost)
+
+SYS = LSMSystem()
+
+T_strat = st.floats(min_value=2.0, max_value=100.0, allow_nan=False)
+h_strat = st.floats(min_value=0.0, max_value=9.9, allow_nan=False)  # bits/entry
+K_strat = st.floats(min_value=1.0, max_value=99.0, allow_nan=False)
+
+
+@settings(max_examples=60, deadline=None)
+@given(T=T_strat, h=h_strat, K=K_strat)
+def test_cost_vector_finite_positive(T, h, K):
+    phi = make_phi(T, h * SYS.N, K, SYS)
+    c = np.asarray(cost_vector(phi, SYS))
+    assert np.all(np.isfinite(c)), c
+    assert np.all(c >= 0.0), c
+    # A point lookup costs at least ~0 and a non-empty lookup at least ~1 I/O.
+    assert c[1] >= 0.99
+
+
+@settings(max_examples=40, deadline=None)
+@given(T=T_strat, h=h_strat)
+def test_more_filter_memory_reduces_empty_reads(T, h):
+    lo = make_phi(T, h * SYS.N, 1.0, SYS)
+    hi = make_phi(T, min(h + 2.0, 9.9) * SYS.N, 1.0, SYS)
+    # Note: adding filter memory shrinks the buffer, which can add a level;
+    # compare at equal level counts to isolate the Bloom effect.
+    if float(num_levels(lo.T, mbuf_bits(lo, SYS), SYS)) == float(
+            num_levels(hi.T, mbuf_bits(hi, SYS), SYS)):
+        assert float(empty_read_cost(hi, SYS)) <= float(
+            empty_read_cost(lo, SYS)) + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(T=st.floats(min_value=3.0, max_value=50.0), h=h_strat)
+def test_tiering_writes_cheaper_reads_dearer(T, h):
+    """Leveling optimizes reads, tiering writes (Section 2)."""
+    lev = leveling_phi(T, h * SYS.N, SYS)
+    tier = tiering_phi(T, h * SYS.N, SYS)
+    assert float(write_cost(tier, SYS)) <= float(write_cost(lev, SYS)) + 1e-9
+    assert float(empty_read_cost(tier, SYS)) >= float(
+        empty_read_cost(lev, SYS)) - 1e-9
+    assert float(range_cost(tier, SYS)) >= float(range_cost(lev, SYS)) - 1e-9
+
+
+def test_levels_eq1_exact():
+    # L = ceil(log_T(N E / m_buf + 1))
+    phi = leveling_phi(10.0, 2.0 * SYS.N, SYS)
+    mbuf = mbuf_bits(phi, SYS)
+    expect = np.ceil(np.log(SYS.N * SYS.entry_bits / float(mbuf) + 1) /
+                     np.log(10.0))
+    assert float(num_levels(phi.T, mbuf, SYS)) == expect
+
+
+def test_monkey_fprs_monotone_deeper_levels():
+    """Eq. 3: deeper levels get larger FPR (less filter memory per entry)."""
+    phi = leveling_phi(8.0, 5.0 * SYS.N, SYS)
+    f = np.asarray(level_fprs(phi, SYS))
+    m = np.asarray(level_mask(phi, SYS))
+    L = int(m.sum())
+    assert np.all(np.diff(f[:L]) >= -1e-12)
+    assert np.all(f <= 1.0 + 1e-6)
+
+
+def test_design_reductions_match_closed_forms():
+    """Table 3: K-LSM with the right K vector reproduces each design."""
+    theta = jnp.zeros((2 + SYS.max_levels,))
+    for design, ref_K in [
+        (DesignSpace.LEVELING, 1.0),
+        (DesignSpace.TIERING, None),
+    ]:
+        phi = to_phi(theta[:2], design, SYS)
+        T = float(phi.T)
+        K = np.asarray(phi.K)
+        if ref_K is not None:
+            assert np.allclose(K, ref_K)
+        else:
+            assert np.allclose(K, T - 1.0)
+
+    phi_lazy = to_phi(theta[:2], DesignSpace.LAZY_LEVELING, SYS)
+    L = int(num_levels(phi_lazy.T, mbuf_bits(phi_lazy, SYS), SYS))
+    K = np.asarray(phi_lazy.K)
+    assert K[L - 1] == 1.0
+    assert np.allclose(K[:L - 1], float(phi_lazy.T) - 1.0)
+
+    phi_1lvl = to_phi(theta[:2], DesignSpace.ONE_LEVELING, SYS)
+    K = np.asarray(phi_1lvl.K)
+    assert K[0] == float(phi_1lvl.T) - 1.0 and np.allclose(K[1:], 1.0)
+
+
+def test_klsm_generalizes_leveling_cost():
+    """cost(K-LSM with K=1) == cost(leveling) at identical (T, m_filt)."""
+    phi_lev = leveling_phi(12.0, 6.0 * SYS.N, SYS)
+    phi_klsm = make_phi(12.0, 6.0 * SYS.N, 1.0, SYS)
+    np.testing.assert_allclose(np.asarray(cost_vector(phi_lev, SYS)),
+                               np.asarray(cost_vector(phi_klsm, SYS)))
+
+
+def test_write_cost_eq9_hand_computed():
+    """Eq. 9 against a hand computation for T=5, leveling, 3 levels."""
+    sys = LSMSystem(N=1e6, entry_bits=8192, bits_per_entry=10.0,
+                    min_buf_bits=8192 * 128)
+    phi = leveling_phi(5.0, 5.0 * sys.N, sys)
+    mbuf = float(mbuf_bits(phi, sys))
+    L = float(num_levels(phi.T, mbuf, sys))
+    per_level = (5.0 - 1.0 + 1.0) / 2.0
+    expect = sys.f_seq * (1 + sys.f_a) / sys.B * per_level * L
+    np.testing.assert_allclose(float(write_cost(phi, sys)), expect, rtol=1e-5)
+
+
+def test_range_cost_eq7_hand_computed():
+    phi = leveling_phi(10.0, 5.0 * SYS.N, SYS)
+    L = float(num_levels(phi.T, mbuf_bits(phi, SYS), SYS))
+    expect = SYS.f_seq * SYS.s_rq * SYS.N / SYS.B + L  # K_i = 1
+    np.testing.assert_allclose(float(range_cost(phi, SYS)), expect, rtol=1e-6)
+
+
+def test_rounding_respects_bounds():
+    phi = make_phi(7.3, 5 * SYS.N, 3.7, SYS).round_integral(SYS)
+    assert float(phi.T) == 8.0
+    K = np.asarray(phi.K)
+    assert np.all((K >= 1.0) & (K <= 7.0))

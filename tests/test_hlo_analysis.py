@@ -1,0 +1,88 @@
+"""Tests for the HLO roofline analyzer: while-trip correction, dot FLOPs,
+collective attribution, and the slice-accounting rules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.utils.hlo import analyze_hlo
+
+
+def _compile_text(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+def test_while_trip_correction_exact():
+    """scan(n) must count n x the body flops (XLA counts it once)."""
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def scanned(x, Ws):
+        y, _ = jax.lax.scan(body, x, Ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((4, 64), jnp.float32)
+    Ws = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+    hlo = _compile_text(scanned, x, Ws)
+    costs = analyze_hlo(hlo, (1,), ("data",))
+    assert costs.while_trips == [6]
+    expect = 6 * 2 * 4 * 64 * 64
+    assert costs.flops == pytest.approx(expect, rel=0.01)
+
+
+def test_dot_flops_from_shapes():
+    def fn(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 16), jnp.float32)
+    costs = analyze_hlo(_compile_text(fn, a, b), (1,), ("data",))
+    assert costs.flops == pytest.approx(2 * 32 * 128 * 16, rel=0.01)
+
+
+def test_dynamic_update_slice_counts_update_only():
+    """KV-cache style DUS must count the update region, not the cache."""
+    def fn(cache, new):
+        return jax.lax.dynamic_update_slice(cache, new, (0, 5, 0))
+
+    cache = jax.ShapeDtypeStruct((4, 1024, 64), jnp.float32)
+    new = jax.ShapeDtypeStruct((4, 1, 64), jnp.float32)
+    hlo = jax.jit(fn, donate_argnums=(0,)).lower(cache, new).compile() \
+        .as_text()
+    costs = analyze_hlo(hlo, (1,), ("data",))
+    cache_bytes = 4 * 1024 * 64 * 4
+    # The DUS itself counts ~2x the update region; allow for an XLA copy of
+    # the buffer but assert we stay far below naive operand counting
+    # (operand+result = 2x full cache *per DUS*).
+    assert costs.bytes < 1.2 * cache_bytes
+
+
+def test_bf16_correction_halves_f32_share():
+    from repro.utils.hlo import HloCosts
+    c = HloCosts(flops=0, bytes=100.0, collective_bytes_by_axis={"m": 10.0},
+                 collective_count=1, raw_entry_flops=0, while_trips=[],
+                 bytes_f32=60.0, collective_bytes_f32=10.0)
+    cc = c.bf16_corrected()
+    assert cc.bytes == pytest.approx(70.0)
+    assert cc.collective_bytes == pytest.approx(5.0)
+
+
+def test_roofline_terms_and_bottleneck():
+    from repro.configs.base import ShapeConfig
+    from repro.configs import get_config
+    from repro.utils.hlo import HloCosts
+    from repro.utils.roofline import terms_from_hlo
+
+    cfg = get_config("glm4-9b")
+    shape = ShapeConfig("train_4k", 4096, 256, "train")
+    costs = HloCosts(flops=1e15, bytes=1e13, collective_bytes_by_axis={
+        "data": 1e11, "model": 4e11}, collective_count=10,
+        raw_entry_flops=0, while_trips=[40])
+    t = terms_from_hlo("glm4-9b", shape, "single", 256, costs, cfg)
+    assert t.compute_s == pytest.approx(1e15 / 197e12)
+    assert t.memory_s == pytest.approx(1e13 / 819e9)
+    assert t.collective_s == pytest.approx(5e11 / 50e9)
+    assert t.bottleneck == "memory"
+    assert 0 < t.useful_ratio < 1
+    assert t.roofline_frac == pytest.approx(t.compute_s / t.memory_s)

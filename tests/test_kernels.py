@@ -1,0 +1,213 @@
+"""Per-kernel validation: shape/dtype sweeps in interpret mode against the
+pure-jnp oracles (+ hypothesis property tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.bloom_probe.kernel import bloom_probe_kernel
+from repro.kernels.bloom_probe.ref import build_plane, probe_ref
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv6.kernel import rwkv6_kernel
+from repro.kernels.rwkv6.ops import rwkv6_chunked
+from repro.kernels.rwkv6.ref import wkv_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,d,causal,window,dtype", [
+    (128, 64, True, None, jnp.float32),
+    (256, 64, False, None, jnp.float32),
+    (256, 128, True, None, jnp.float32),
+    (256, 96, True, None, jnp.float32),        # phi3 head_dim
+    (512, 64, True, 128, jnp.float32),         # SWA
+    (256, 64, True, None, jnp.bfloat16),
+])
+def test_flash_attention_shapes(S, d, causal, window, dtype):
+    rng = np.random.default_rng(hash((S, d, causal)) % 2 ** 31)
+    q = jnp.asarray(rng.normal(size=(3, S, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(3, S, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(3, S, d)), dtype)
+    out = flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                 block_q=64, block_kv=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(bq=st.sampled_from([32, 64, 128]), bkv=st.sampled_from([32, 64, 128]),
+       seed=st.integers(0, 100))
+def test_flash_attention_block_shape_invariance(bq, bkv, seed):
+    """Output must not depend on the tiling."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.float32)
+    a = flash_attention_kernel(q, k, v, block_q=bq, block_kv=bkv,
+                               interpret=True)
+    b = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_attention_gqa_wrapper_matches_model_sdpa():
+    """ops.flash_attention (GQA expansion) vs the model's XLA attention."""
+    from repro.configs import get_config
+    from repro.models.layers import _repeat_kv, _sdpa, causal_mask
+    cfg = get_config("qwen3-14b").reduced()
+    rng = np.random.default_rng(0)
+    B, S, H, KV, hd = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, block_q=32, block_kv=32)
+    b = _sdpa(q, k, v, causal_mask(S, S, None), cfg)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5,
+                               rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,n,chunk,dtype", [
+    (64, 64, 16, jnp.float32),
+    (128, 64, 32, jnp.float32),
+    (96, 32, 32, jnp.float32),    # chunk == S/3
+    (128, 64, 32, jnp.bfloat16),
+])
+def test_rwkv6_kernel_shapes(S, n, chunk, dtype):
+    rng = np.random.default_rng(S + n)
+    BH = 4
+    r = jnp.asarray(rng.normal(size=(BH, S, n)), dtype)
+    k = jnp.asarray(rng.normal(size=(BH, S, n)), dtype)
+    v = jnp.asarray(rng.normal(size=(BH, S, n)), dtype)
+    logw = -jnp.exp(jnp.asarray(rng.normal(size=(BH, S, n)) * 0.5 - 0.6,
+                                jnp.float32)).astype(dtype)
+    u = jnp.asarray(rng.normal(size=(BH, n)) * 0.1, jnp.float32)
+    y, s = rwkv6_kernel(r, k, v, logw, u, chunk=chunk, interpret=True)
+    y_ref, s_ref = wkv_ref(r, k, v, logw, u)
+    tol = 5e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=tol,
+                               rtol=tol)
+
+
+@settings(max_examples=6, deadline=None)
+@given(chunk=st.sampled_from([8, 16, 32, 64]), seed=st.integers(0, 50))
+def test_rwkv6_chunk_size_invariance(chunk, seed):
+    """The chunked algorithm must be exact for any chunk size."""
+    rng = np.random.default_rng(seed)
+    BH, S, n = 2, 64, 32
+    r = jnp.asarray(rng.normal(size=(BH, S, n)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(BH, S, n)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(BH, S, n)), jnp.float32)
+    logw = -jnp.exp(jnp.asarray(rng.normal(size=(BH, S, n)) * 0.3 - 1.0,
+                                jnp.float32))
+    u = jnp.asarray(rng.normal(size=(BH, n)) * 0.1, jnp.float32)
+    y, _ = rwkv6_kernel(r, k, v, logw, u, chunk=chunk, interpret=True)
+    y_ref, _ = wkv_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=5e-4,
+                               rtol=5e-4)
+
+
+def test_rwkv6_ops_matches_model_path():
+    """kernels.rwkv6.ops vs models.rwkv.wkv_chunked (the XLA path)."""
+    from repro.models.rwkv import wkv_chunked
+    rng = np.random.default_rng(3)
+    B, S, H, n = 2, 64, 3, 32
+    r = jnp.asarray(rng.normal(size=(B, S, H, n)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, n)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, n)), jnp.float32)
+    logw = -jnp.exp(jnp.asarray(rng.normal(size=(B, S, H, n)) * 0.3 - 1.0,
+                                jnp.float32))
+    u = jnp.asarray(rng.normal(size=(H, n)) * 0.1, jnp.float32)
+    y1, s1 = rwkv6_chunked(r, k, v, logw, u, chunk=16)
+    y2, s2 = wkv_chunked(r, k, v, logw, u, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4,
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4,
+                               rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# bloom probe
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_blocks,block_bits,num_hashes", [
+    (128, 256, 3), (256, 512, 4), (64, 1024, 6),
+])
+def test_bloom_probe_shapes(num_blocks, block_bits, num_hashes):
+    rng = np.random.default_rng(num_blocks)
+    keys = rng.choice(2 ** 32, 2048, replace=False).astype(np.uint32)
+    plane = build_plane(keys[:1024], num_blocks, block_bits, num_hashes)
+    out = bloom_probe_kernel(jnp.asarray(keys), jnp.asarray(plane),
+                             num_hashes=num_hashes, interpret=True)
+    ref = probe_ref(keys, plane, num_hashes)
+    assert (np.asarray(out) == ref).all()
+    # no false negatives, ever
+    assert (np.asarray(out[:1024]) > 0.5).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_bloom_probe_no_false_negatives(seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(2 ** 32, 512, replace=False).astype(np.uint32)
+    plane = build_plane(keys, 128, 512, 4)
+    out = bloom_probe_kernel(jnp.asarray(keys), jnp.asarray(plane),
+                             num_hashes=4, interpret=True)
+    assert (np.asarray(out) > 0.5).all()
+
+
+# ---------------------------------------------------------------------------
+# model integration: attention_impl="pallas" end to end
+# ---------------------------------------------------------------------------
+
+def test_model_with_pallas_attention_matches_xla():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg_x = get_config("mixtral-8x7b").reduced()
+    cfg_p = cfg_x.replace(attention_impl="pallas")
+    api_x, api_p = build_model(cfg_x), build_model(cfg_p)
+    params = api_x.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg_x.vocab_size, (2, 32)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg_x.vocab_size, (2, 32)),
+                              jnp.int32),
+    }
+    lx, _ = api_x.loss_fn(params, batch)
+    lp, _ = api_p.loss_fn(params, batch)
+    assert float(lx) == pytest.approx(float(lp), rel=1e-3)
+
+
+def test_model_with_pallas_rwkv_matches_xla():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg_x = get_config("rwkv6-3b").reduced()
+    cfg_p = cfg_x.replace(attention_impl="pallas")
+    api_x, api_p = build_model(cfg_x), build_model(cfg_p)
+    params = api_x.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg_x.vocab_size, (2, 32)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg_x.vocab_size, (2, 32)),
+                              jnp.int32),
+    }
+    lx, _ = api_x.loss_fn(params, batch)
+    lp, _ = api_p.loss_fn(params, batch)
+    assert float(lx) == pytest.approx(float(lp), rel=1e-3)

@@ -1,0 +1,192 @@
+"""Tests for the framework substrate: data pipeline, optimizer, gradient
+compression, checkpoint store, elastic policy, robust sharding."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data.pipeline import DataConfig, global_batch_at, shard_batch_at
+from repro.launch.elastic import (ElasticPolicy, RunSupervisor, dead_workers,
+                                  remesh, reshard_plan, stragglers)
+from repro.optim import adamw
+from repro.optim.compression import compressed_cross_pod_mean
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 10_000), shards=st.sampled_from([1, 2, 4, 8]))
+def test_pipeline_determinism_and_sharding(step, shards):
+    """Any worker can recompute any batch; shards tile the global batch."""
+    cfg = DataConfig(vocab_size=256, seq_len=32, global_batch=8)
+    full = global_batch_at(cfg, step)
+    again = global_batch_at(cfg, step)
+    np.testing.assert_array_equal(full["tokens"], again["tokens"])
+    parts = [shard_batch_at(cfg, step, s, shards) for s in range(shards)]
+    np.testing.assert_array_equal(
+        np.concatenate([p["tokens"] for p in parts]), full["tokens"])
+
+
+def test_pipeline_is_learnable():
+    """Labels are the shifted tokens (next-token prediction consistency)."""
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=4)
+    b = global_batch_at(cfg, 7)
+    assert b["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# optimizer + compression
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0, 5.0])}
+    state = adamw.init(params)
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw.update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init(params)
+    cfg = adamw.AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    _, _, m = adamw.update({"w": jnp.full(4, 1e6)}, state, params, cfg)
+    assert float(m["grad_norm"]) > 1e5  # measured pre-clip
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), pods=st.sampled_from([2, 4]))
+def test_compressed_mean_with_error_feedback(seed, pods):
+    """int8 cross-pod mean: exact common-scale arithmetic + EF residual
+    drives the accumulated error to ~0 over repeated steps."""
+    rng = np.random.default_rng(seed)
+    per_pod = [{"g": jnp.asarray(rng.normal(size=300), jnp.float32)}
+               for _ in range(pods)]
+    true_mean = np.mean([np.asarray(p["g"]) for p in per_pod], axis=0)
+
+    # emulate the collectives across the pod list
+    def psum(trees):
+        return jax.tree.map(lambda *xs: sum(xs), *trees)
+
+    def pmax(trees):
+        return jax.tree.map(lambda *xs: jnp.maximum(*xs) if len(xs) == 2
+                            else jnp.max(jnp.stack(xs), 0), *trees)
+
+    residuals = [{"g": jnp.zeros(300)} for _ in range(pods)]
+    # one step: quantize on common scale, sum, dequantize
+    outs = []
+    # common scale across pods
+    import repro.optim.compression as comp
+    scales = pmax([jax.tree.map(
+        lambda g, r: comp._quantize_int8((g + r).reshape(-1))[1],
+        per_pod[i], residuals[i]) for i in range(pods)])
+    means, new_res = [], []
+    for i in range(pods):
+        m, r = compressed_cross_pod_mean(
+            per_pod[i], residuals[i],
+            psum_fn=lambda t, i=i: psum([t] * 1),  # placeholder
+            pmax_fn=lambda t: scales, n_pods=1)
+        means.append(m)
+        new_res.append(r)
+    # sum of per-pod dequantized == psum result; mean error bounded by scale
+    approx = np.mean([np.asarray(m["g"]) for m in means], axis=0)
+    err = np.abs(approx - true_mean).max()
+    max_scale = float(np.max(np.asarray(scales["g"])))
+    assert err <= 2 * max_scale  # within 2 quantization steps
+    # error feedback captured the residual exactly
+    for i in range(pods):
+        recon = np.asarray(means[i]["g"]) + np.asarray(new_res[i]["g"])
+        np.testing.assert_allclose(recon, np.asarray(per_pod[i]["g"]),
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store + elastic restore
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_cursor(tmp_path):
+    from repro.checkpoint import CheckpointStore
+    store = CheckpointStore.create(str(tmp_path))
+    params = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+              "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    store.save(5, params, opt_state=None, data_state={"step": 42})
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                        params)
+    restored, meta = store.restore(like)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(params["a"]))
+    assert meta["data_state"]["step"] == 42
+    assert store.latest_step() == 5
+
+
+def test_checkpoint_store_uses_robust_tuning(tmp_path):
+    """The manifest LSM tree must carry an ENDURE tuning (integration)."""
+    from repro.checkpoint import CheckpointStore
+    store = CheckpointStore.create(str(tmp_path), ckpt_interval=50,
+                                   restore_prob=0.5, rho=1.0)
+    cfg = store.manifest.cfg
+    assert cfg.T >= 2
+    assert 0 <= cfg.mfilt_bits_per_entry <= 16.0
+    # engine actually works as the manifest
+    store.save(1, {"w": jnp.ones(3)})
+    assert store.latest_step() == 1
+
+
+def test_elastic_policy_decisions():
+    pol = ElasticPolicy(heartbeat_timeout_s=10, straggler_zscore=3.0)
+    now = 1000.0
+    hb = {0: {"t": 999.0}, 1: {"t": 998.0}, 2: {"t": 900.0}}  # 2 is dead
+    assert dead_workers(hb, now, 4, pol) == [2, 3]  # 3 never heartbeat
+    times = {0: [1.0] * 8, 1: [1.01] * 8, 2: [1.02] * 8, 3: [9.0] * 8}
+    assert stragglers(times, pol) == [3]
+    assert remesh(24, 8, pol) == (3, 8)
+    assert remesh(7, 8, pol) is None
+
+
+def test_reshard_plan_covers_batch():
+    plan = reshard_plan(old_shards=8, new_shards=6, global_batch=48)
+    covered = sorted({o for olds in plan.values() for o in olds})
+    assert covered == list(range(8))
+
+
+def test_supervisor_restart_decision():
+    sup = RunSupervisor(num_workers=8, model_parallel=2,
+                        policy=ElasticPolicy(heartbeat_timeout_s=5))
+    now = time.time()
+    hb = {w: {"t": now} for w in range(7)}  # worker 7 silent
+    decision = sup.decide(hb, now + 2)
+    assert decision["action"] == "restart_from_checkpoint"
+    assert decision["new_mesh"] == (3, 2)  # 7 alive -> 3x2 mesh
+
+
+# ---------------------------------------------------------------------------
+# robust sharding (beyond-paper)
+# ---------------------------------------------------------------------------
+
+def test_robust_layout_prefers_flat_candidates():
+    from repro.core.robust_sharding import (LayoutCandidate, nominal_layout,
+                                            robust_layout)
+    spiky = LayoutCandidate("spiky", np.array([0.5, 1.0, 1.0, 50.0]))
+    flat = LayoutCandidate("flat", np.array([1.3, 1.3, 1.3, 2.0]))
+    mix = np.array([0.9, 0.05, 0.04, 0.01])
+    assert nominal_layout([spiky, flat], mix).name == "spiky"
+    assert robust_layout([spiky, flat], mix, rho=1.0).name == "flat"
+
+
+def test_adversarial_mix_targets_weakness():
+    from repro.core.robust_sharding import LayoutCandidate, adversarial_mix
+    c = LayoutCandidate("x", np.array([1.0, 1.0, 1.0, 30.0]))
+    mix = np.array([0.7, 0.1, 0.1, 0.1])
+    adv = adversarial_mix(c, mix, rho=0.5)
+    assert adv[3] > mix[3]  # shifts mass to the weak class
+    assert abs(adv.sum() - 1.0) < 1e-5
