@@ -3,7 +3,9 @@
 Claim: nominal wins only (1) when the observed workload is ~= expected
 (KL ~ 0) or (2) when rho < 0.2 while real variation is higher; elsewhere
 robust dominates.  Rule of thumb validated: pick rho ~= max pairwise KL of
-observed workloads."""
+observed workloads.
+
+The six-rho robust sweep is one `tune_robust_many` dispatch."""
 
 from __future__ import annotations
 
@@ -12,7 +14,8 @@ from typing import List
 
 import numpy as np
 
-from repro.core import EXPECTED_WORKLOADS, kl_divergence, tune_nominal, tune_robust
+from repro.core import (EXPECTED_WORKLOADS, kl_divergence, tune_nominal,
+                        tune_robust_many)
 from .common import B_SET, SYS, Row, costs_over_B, delta_tp
 
 W7 = EXPECTED_WORKLOADS[7]
@@ -25,13 +28,13 @@ def run() -> List[Row]:
     t0 = time.time()
     rn = tune_nominal(W7, SYS, seed=0)
     cn = costs_over_B(rn.phi)
+    robust = tune_robust_many([W7], RHOS, SYS, seed=0)[0]
     kls = np.asarray([float(kl_divergence(jnp.asarray(w), jnp.asarray(W7)))
                       for w in B_SET])
 
     grid = {}
-    for rho in RHOS:
-        rr = tune_robust(W7, rho, SYS, seed=0)
-        d = delta_tp(cn, costs_over_B(rr.phi))
+    for j, rho in enumerate(RHOS):
+        d = delta_tp(cn, costs_over_B(robust[j].phi))
         for lo, hi in KL_BINS:
             sel = (kls >= lo) & (kls < hi)
             if sel.any():

@@ -2,16 +2,53 @@
 """Benchmark harness: one module per paper table/figure (+ roofline).
 
 Usage:
-    PYTHONPATH=src python -m benchmarks.run            # all
-    PYTHONPATH=src python -m benchmarks.run fig6 tab5  # substring filter
+    PYTHONPATH=src python -m benchmarks.run                  # all
+    PYTHONPATH=src python -m benchmarks.run fig6 tab5        # substring filter
+    PYTHONPATH=src python -m benchmarks.run --json out/      # + BENCH_*.json
+
+``--json OUT`` writes one ``BENCH_<suite>.json`` per executed suite into the
+OUT directory: per-suite wall time plus every row's derived metrics, so later
+PRs have a machine-readable perf trajectory to compare against.
 """
 
-import sys
+import argparse
+import json
+import math
+import os
 import time
 import traceback
 
 
+def _jsonable(x):
+    """Best-effort conversion of derived metric values to *strict* JSON types
+    (non-finite floats become null: consumers parse these files with strict
+    parsers, which reject the bare NaN/Infinity literals json.dump emits)."""
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, bool) or x is None:
+        return x
+    if hasattr(x, "item"):          # numpy / jax scalars
+        try:
+            return _jsonable(x.item())
+        except Exception:
+            return str(x)
+    if isinstance(x, float):
+        return x if math.isfinite(x) else None
+    if isinstance(x, (int, str)):
+        return x
+    return str(x)
+
+
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("filters", nargs="*",
+                        help="substring filters on suite names")
+    parser.add_argument("--json", metavar="OUT", default=None,
+                        help="directory to write per-suite BENCH_<suite>.json")
+    args = parser.parse_args()
+
     from . import (bench_entry_size, bench_flexible_robustness,
                    bench_nominal_designs, bench_rho_choice, bench_rho_impact,
                    bench_robust_sharding, bench_robust_vs_nominal,
@@ -28,21 +65,40 @@ def main() -> None:
         ("roofline", bench_roofline),
         ("robust_sharding", bench_robust_sharding),
     ]
-    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    if args.json:
+        os.makedirs(args.json, exist_ok=True)
     print("name,us_per_call,derived")
     failures = 0
     for key, mod in suites:
-        if filters and not any(f in key for f in filters):
+        if args.filters and not any(f in key for f in args.filters):
             continue
         t0 = time.time()
+        rows, error = [], None
         try:
             for row in mod.run():
+                rows.append(row)
                 print(row.csv(), flush=True)
-        except Exception:
+        except Exception as exc:
             failures += 1
+            error = f"{type(exc).__name__}: {exc}"
             print(f"{key},nan,ERROR", flush=True)
             traceback.print_exc()
-        print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+        wall = time.time() - t0
+        print(f"# {key} done in {wall:.1f}s", flush=True)
+        if args.json:
+            payload = {
+                "suite": key,
+                "wall_time_s": round(wall, 3),
+                "error": error,
+                "rows": [{"name": r.name,
+                          "us_per_call": _jsonable(round(float(r.us), 1)),
+                          "derived": _jsonable(r.derived)} for r in rows],
+            }
+            path = os.path.join(args.json, f"BENCH_{key}.json")
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True,
+                          allow_nan=False)
+            print(f"# wrote {path}", flush=True)
     if failures:
         raise SystemExit(f"{failures} benchmark suites failed")
 

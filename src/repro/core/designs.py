@@ -110,6 +110,25 @@ def to_phi(theta: jnp.ndarray, design: DesignSpace, sys: LSMSystem,
     return Phi(T=T, mfilt_bits=mfilt, K=K)
 
 
+def to_phi_policy(theta: jnp.ndarray, policy: jnp.ndarray, sys: LSMSystem,
+                  smooth: bool = False) -> Phi:
+    """Design-axis-aware map for the CLASSIC family.
+
+    ``policy`` selects the run-cap profile along a *traced* axis — 0.0 is
+    LEVELING (K_i = 1), 1.0 is TIERING (K_i = max(T-1, 1)) — so the batched
+    tuners can fold both CLASSIC branches into one (2 * n_starts) batch axis
+    instead of two recursive Python calls.  Both branches share the same
+    2-parameter theta layout, and at policy in {0.0, 1.0} this reproduces
+    ``to_phi(theta, LEVELING/TIERING, sys)`` exactly.
+    """
+    T = _T_from(theta[0], sys)
+    mfilt = _mfilt_from(theta[1], sys)
+    K_tier = jnp.maximum(T - 1.0, 1.0)
+    K = (1.0 + policy * (K_tier - 1.0)) * jnp.ones((sys.max_levels,),
+                                                   theta.dtype)
+    return Phi(T=T, mfilt_bits=mfilt, K=K)
+
+
 def describe(phi: Phi, sys: LSMSystem) -> str:
     """Human-readable tuning summary: (T, m_filt bits/entry, K-profile)."""
     import numpy as np
@@ -134,3 +153,21 @@ def random_inits(key: jax.Array, n: int, design: DesignSpace,
     """Multi-start initial thetas, shape (n, n_params)."""
     p = n_params(design, sys)
     return jax.random.uniform(key, (n, p), minval=-3.0, maxval=3.0)
+
+
+def random_inits_many(key: jax.Array, n_problems: int, n_starts: int,
+                      design: DesignSpace, sys: LSMSystem,
+                      share: bool = True) -> jnp.ndarray:
+    """Batched multi-start inits, shape (n_problems, n_starts, n_params).
+
+    With ``share=True`` (default) every problem gets the *same* starts as a
+    sequential ``random_inits(key, n_starts, ...)`` call would produce, so the
+    batched tuners reproduce the sequential tuners' trajectories seed-for-seed
+    (and CLASSIC's two folded branches see identical inits, as the recursive
+    solver did).  ``share=False`` draws independent starts per problem.
+    """
+    if share:
+        t = random_inits(key, n_starts, design, sys)
+        return jnp.broadcast_to(t, (n_problems,) + t.shape)
+    keys = jax.random.split(key, n_problems)
+    return jax.vmap(lambda k: random_inits(k, n_starts, design, sys))(keys)

@@ -194,13 +194,52 @@ def write_cost(phi: Phi, sys: LSMSystem, smooth: bool = False) -> jnp.ndarray:
 
 
 def cost_vector(phi: Phi, sys: LSMSystem, smooth: bool = False) -> jnp.ndarray:
-    """c(Phi) = (Z0, Z1, Q, W), paper Section 3."""
-    return jnp.stack([
-        empty_read_cost(phi, sys, smooth=smooth),
-        nonempty_read_cost(phi, sys, smooth=smooth),
-        range_cost(phi, sys, smooth=smooth),
-        write_cost(phi, sys, smooth=smooth),
-    ])
+    """c(Phi) = (Z0, Z1, Q, W), paper Section 3.
+
+    Fused implementation: identical formulas to the four component functions
+    above (tests assert elementwise equality), but the shared intermediates
+    (L, per-level FPRs, level mask, clamped K) are computed once instead of
+    once per component — this sits on the tuners' innermost hot path, where it
+    runs at every Adam step for every (workload, rho, start) lane.
+    """
+    T = jnp.maximum(phi.T, 1.0 + 1e-6)
+    mbuf_raw = mbuf_bits(phi, sys)
+    mbuf = jnp.maximum(mbuf_raw, sys.min_buf_bits)
+    L = num_levels(T, mbuf_raw, sys, smooth=smooth)
+    i = jnp.arange(1, sys.max_levels + 1, dtype=phi.T.dtype)
+    log_T = jnp.log(T)
+
+    # Eq. 3 (Monkey FPRs) and the 1..L mask.
+    log_f = (T / (T - 1.0)) * log_T - (L + 1.0 - i) * log_T \
+        - (phi.mfilt_bits / sys.N) * LN2_SQ
+    f = jnp.clip(jnp.exp(jnp.minimum(log_f, 0.0)), 1e-30, 1.0)
+    if smooth:
+        m = jnp.clip(L - i + 1.0, 0.0, 1.0)
+    else:
+        m = (i <= L).astype(phi.T.dtype)
+    K = _clamped_K(phi)
+
+    # Eq. 4.
+    kf = m * K * f
+    z0 = jnp.sum(kf)
+
+    # Eqs. 5-6 (masked in log-space; see nonempty_read_cost).
+    log_cap = jnp.log(T - 1.0) + (i - 1.0) * log_T \
+        + jnp.log(mbuf / sys.entry_bits)
+    cap = jnp.exp(jnp.where(m > 0, log_cap, -jnp.inf)) * m
+    Nf = jnp.sum(cap)
+    p_level = cap / jnp.maximum(Nf, 1.0)
+    above = jnp.cumsum(kf) - kf
+    z1 = jnp.sum(p_level * (1.0 + above + 0.5 * (K - 1.0) * f))
+
+    # Eq. 7.
+    q = sys.f_seq * sys.s_rq * sys.N / sys.B + jnp.sum(m * K)
+
+    # Eq. 9.
+    w = sys.f_seq * (1.0 + sys.f_a) / sys.B \
+        * jnp.sum(m * (phi.T - 1.0 + K) / (2.0 * K))
+
+    return jnp.stack([z0, z1, q, w])
 
 
 def expected_cost(w: jnp.ndarray, phi: Phi, sys: LSMSystem,

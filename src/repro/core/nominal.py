@@ -17,7 +17,6 @@ the exact (non-smooth) cost model.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
@@ -25,9 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import designs
-from ._opt import minimize_adam
 from .designs import DesignSpace
-from .lsm_cost import LSMSystem, Phi, cost_vector, expected_cost
+from .lsm_cost import LSMSystem, Phi, expected_cost
 
 
 @dataclasses.dataclass
@@ -43,53 +41,22 @@ class TuningResult:
 
 
 # ---------------------------------------------------------------------------
-# JAX multi-start tuner
+# JAX multi-start tuner (delegates to the batched engine, P = 1)
 # ---------------------------------------------------------------------------
-
-@partial(jax.jit, static_argnames=("design", "sys", "n_starts", "steps", "lr"))
-def _tune_theta_batch(key, w, design: DesignSpace, sys: LSMSystem,
-                      n_starts: int, steps: int, lr: float):
-    thetas = designs.random_inits(key, n_starts, design, sys)
-
-    def obj(theta):
-        phi = designs.to_phi(theta, design, sys, smooth=True)
-        return expected_cost(w, phi, sys, smooth=True)
-
-    def run_one(theta0):
-        return minimize_adam(obj, theta0, steps=steps, lr=lr)
-
-    best_t, best_v = jax.vmap(run_one)(thetas)
-
-    # Exact re-evaluation (ceil/round) before picking a winner: the smooth
-    # objective is only a surrogate.
-    def exact_cost(theta):
-        phi = designs.to_phi(theta, design, sys, smooth=False)
-        phi = phi.round_integral(sys)
-        return expected_cost(w, phi, sys, smooth=False)
-
-    exact = jax.vmap(exact_cost)(best_t)
-    i = jnp.argmin(jnp.where(jnp.isfinite(exact), exact, jnp.inf))
-    return best_t[i], exact[i]
-
 
 def tune_nominal(w, sys: LSMSystem,
                  design: DesignSpace = DesignSpace.CLASSIC,
                  n_starts: int = 64, steps: int = 250, lr: float = 0.25,
                  seed: int = 0) -> TuningResult:
-    """Solve NOMINAL TUNING for ``design``; CLASSIC = best of {level, tier}."""
-    w = jnp.asarray(w, jnp.float32)
-    if design is DesignSpace.CLASSIC:
-        cands = [tune_nominal(w, sys, d, n_starts, steps, lr, seed)
-                 for d in (DesignSpace.LEVELING, DesignSpace.TIERING)]
-        return min(cands, key=lambda r: r.cost)
+    """Solve NOMINAL TUNING for ``design``; CLASSIC = best of {level, tier}.
 
-    key = jax.random.PRNGKey(seed)
-    theta, _ = _tune_theta_batch(key, w, design, sys, n_starts, steps, lr)
-    raw_phi = designs.to_phi(theta, design, sys, smooth=False)
-    phi = raw_phi.round_integral(sys)
-    cost = float(expected_cost(w, phi, sys, smooth=False))
-    return TuningResult(phi=phi, cost=cost, design=design, raw_phi=raw_phi,
-                        solver="jax")
+    Thin wrapper over :func:`repro.core.batch.tune_nominal_many` with a
+    single-workload batch; CLASSIC is folded into one padded batch axis there
+    rather than solved as two recursive calls.
+    """
+    from .batch import tune_nominal_many  # local import: batch imports us
+    return tune_nominal_many([w], sys, design=design, n_starts=n_starts,
+                             steps=steps, lr=lr, seed=seed)[0]
 
 
 # ---------------------------------------------------------------------------

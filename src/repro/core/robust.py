@@ -12,27 +12,52 @@ substituting gives the numerically robust *entropic risk* form
 
     g(lam; Phi) = rho*lam + lam * logsumexp_i( log w_i + c_i(Phi) / lam )
 
-which we minimize over ``lam`` by geometric-grid + golden refinement inside
-JAX (1-D convex problem), and over ``Phi`` by the same vmapped multi-start
-Adam as the nominal tuner.  This substitution is *exact* (simple calculus on
-Eq. 16), not an approximation; tests assert equality of both forms and a
-~zero primal-dual gap against the exact inner maximizer of workload.py.
+which we minimize over ``lam`` inside JAX (1-D convex problem), and over
+``Phi`` by the same vmapped multi-start Adam as the nominal tuner.  This
+substitution is *exact* (simple calculus on Eq. 16), not an approximation;
+tests assert equality of both forms and a ~zero primal-dual gap against the
+exact inner maximizer of workload.py.
+
+Warm-started dual solve
+-----------------------
+``g(lam)`` is convex in ``log lam`` and its minimizer moves only slightly when
+``Phi`` moves by one Adam step, so re-solving the 1-D problem from scratch at
+every objective evaluation (a 64-point geometric grid + 40 golden-section
+iterations) wastes almost all of its work.  The tuners instead thread
+``log lam*`` through the Adam scan (see ``_opt.minimize_adam_carry``):
+
+* :func:`dual_solve_cold` — one full grid + golden solve, used once per start
+  at ``theta_0`` (with a grid cut to 24 points, enough to *bracket* the
+  minimum — the golden refinement does the rest);
+* :func:`dual_solve_warm` — a 3-point local scan around the carried
+  ``log lam*`` followed by a short golden refinement, used at every Adam step.
+
+Exactness: the returned value is ``g(lam_hat)`` with ``lam_hat`` the refined
+bracket midpoint.  Since ``g`` is convex with minimum ``g(lam*)``, the value
+is an upper bound whose error is *second order* in the bracket width (golden
+section shrinks the width by 0.618^n), and gradients w.r.t. ``c`` are exact at
+fixed ``lam_hat`` by the envelope theorem (``dg/dlam = 0`` at the minimum, so
+freezing ``lam_hat`` with ``stop_gradient`` loses only the same second-order
+term).  If the minimizer drifts outside the local window, the window
+re-centers by up to ``half_width`` per step and re-locks within a few steps;
+the final tuning is always re-scored with the full cold solve
+(:func:`robust_cost`), so warm-start inaccuracy can never corrupt reported
+costs — only, at worst, the search trajectory.
 """
 
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import designs
-from ._opt import minimize_adam
 from .designs import DesignSpace
-from .lsm_cost import LSMSystem, Phi, cost_vector, expected_cost
+from .lsm_cost import LSMSystem, Phi, cost_vector
 from .nominal import TuningResult, _theta_bounds
-from .workload import kl_divergence, worst_case_workload
+from .workload import worst_case_workload
+
+_GR = 0.6180339887498949  # golden ratio conjugate
 
 
 def dual_objective_explicit(c: jnp.ndarray, w: jnp.ndarray, rho: float,
@@ -50,6 +75,30 @@ def _g_of_lam(c: jnp.ndarray, w: jnp.ndarray, rho: float,
     return rho * lam + lam * jax.nn.logsumexp(jnp.log(w) + c / lam)
 
 
+def _golden_refine(c, w, rho, llo, lhi, n_golden: int):
+    """Golden-section minimization of g(exp(llam)) on the log-lam bracket."""
+    def body(_, bounds):
+        llo, lhi = bounds
+        a = lhi - _GR * (lhi - llo)
+        b = llo + _GR * (lhi - llo)
+        fa = _g_of_lam(c, w, rho, jnp.exp(a))
+        fb = _g_of_lam(c, w, rho, jnp.exp(b))
+        smaller = fa < fb
+        return jnp.where(smaller, llo, a), jnp.where(smaller, b, lhi)
+
+    return jax.lax.fori_loop(0, n_golden, body, (llo, lhi))
+
+
+def _grid_bracket(c, w, rho, lams):
+    """argmin over a lam grid -> (log lo, log hi) bracket around the min."""
+    n = lams.shape[0]
+    vals = jax.vmap(lambda l: _g_of_lam(c, w, rho, l))(lams)
+    i = jnp.argmin(vals)
+    lo = lams[jnp.maximum(i - 1, 0)]
+    hi = lams[jnp.minimum(i + 1, n - 1)]
+    return jnp.log(lo), jnp.log(hi)
+
+
 def robust_cost(c: jnp.ndarray, w: jnp.ndarray, rho: float,
                 n_grid: int = 64, n_golden: int = 40) -> jnp.ndarray:
     """Worst-case expected cost  max_{w' in U^rho_w} w'^T c  via the dual.
@@ -57,35 +106,70 @@ def robust_cost(c: jnp.ndarray, w: jnp.ndarray, rho: float,
     The 1-D convex minimization over lam uses a geometric grid spanning the
     cost scale followed by golden-section refinement.  Differentiable in ``c``
     via the envelope theorem (gradients flow through g at the minimizing lam).
+    This is the exact (cold-start) solve used for final scoring; the tuners'
+    inner loops use the warm-started pair below.
     """
     w = jnp.asarray(w)
     c = jnp.asarray(c)
     span = jnp.maximum(jnp.max(c) - jnp.min(c), 1e-9)
     # lam* scales with span/rho-ish; cover many decades around it.
     lams = span * jnp.logspace(-6.0, 6.0, n_grid)
-    vals = jax.vmap(lambda l: _g_of_lam(c, w, rho, l))(lams)
-    i = jnp.argmin(vals)
-    lo = lams[jnp.maximum(i - 1, 0)]
-    hi = lams[jnp.minimum(i + 1, n_grid - 1)]
-
-    # Golden-section on log-lam.
-    gr = 0.6180339887498949
-    llo, lhi = jnp.log(lo), jnp.log(hi)
-
-    def body(_, bounds):
-        llo, lhi = bounds
-        a = lhi - gr * (lhi - llo)
-        b = llo + gr * (lhi - llo)
-        fa = _g_of_lam(c, w, rho, jnp.exp(a))
-        fb = _g_of_lam(c, w, rho, jnp.exp(b))
-        smaller = fa < fb
-        return jnp.where(smaller, llo, a), jnp.where(smaller, b, lhi)
-
-    llo, lhi = jax.lax.fori_loop(0, n_golden, body, (llo, lhi))
+    llo, lhi = _grid_bracket(c, w, rho, lams)
+    llo, lhi = _golden_refine(c, w, rho, llo, lhi, n_golden)
     lam_star = jnp.exp(0.5 * (llo + lhi))
     g = _g_of_lam(c, w, rho, lam_star)
     # rho = 0 degenerates to the nominal expected cost.
     return jnp.where(rho <= 0.0, jnp.dot(w, c), g)
+
+
+def dual_solve_cold(c: jnp.ndarray, w: jnp.ndarray, rho,
+                    n_grid: int = 24, n_golden: int = 20):
+    """Full dual solve from scratch; returns ``(value, log lam*)``.
+
+    The grid only needs to *bracket* the convex minimum (golden refinement
+    does the rest), so it is cut to 24 points vs robust_cost's scoring-grade
+    64.  Used once per multi-start at theta_0 to seed the warm carry.
+    """
+    c = jnp.asarray(c)
+    w = jnp.asarray(w)
+    span = jnp.maximum(jnp.max(c) - jnp.min(c), 1e-9)
+    lams = span * jnp.logspace(-6.0, 6.0, n_grid)
+    llo, lhi = _grid_bracket(c, w, rho, lams)
+    llo, lhi = _golden_refine(c, w, rho, llo, lhi, n_golden)
+    llam = jax.lax.stop_gradient(0.5 * (llo + lhi))
+    val = jnp.where(rho <= 0.0, jnp.dot(w, c),
+                    _g_of_lam(c, w, rho, jnp.exp(llam)))
+    return val, llam
+
+
+def dual_solve_warm(c: jnp.ndarray, w: jnp.ndarray, rho, llam,
+                    half_width: float = 0.8, n_local: int = 3,
+                    n_golden: int = 6):
+    """One warm-started dual refinement; returns ``(value, new log lam*)``.
+
+    Scans ``n_local`` points on ``llam +- half_width`` (log-lam), brackets the
+    convex minimum, and golden-refines.  ~16 g-evaluations vs the cold solve's
+    ~104, and the carry means Adam steps *track* lam* instead of re-finding
+    it.  The carry is clipped to the same +-16-nat window around the cost span
+    that the cold grid covers, so it can never drift into exp() overflow (e.g.
+    at rho = 0, where g is minimized at lam -> inf).
+    """
+    c = jnp.asarray(c)
+    w = jnp.asarray(w)
+    llam = jax.lax.stop_gradient(llam)
+    offs = jnp.linspace(-half_width, half_width, n_local)
+    lls = llam + offs
+    vals = jax.vmap(lambda ll: _g_of_lam(c, w, rho, jnp.exp(ll)))(lls)
+    i = jnp.argmin(vals)
+    llo = lls[jnp.maximum(i - 1, 0)]
+    lhi = lls[jnp.minimum(i + 1, n_local - 1)]
+    llo, lhi = _golden_refine(c, w, rho, llo, lhi, n_golden)
+    lspan = jnp.log(jnp.maximum(jnp.max(c) - jnp.min(c), 1e-9))
+    llam_new = jax.lax.stop_gradient(
+        jnp.clip(0.5 * (llo + lhi), lspan - 16.0, lspan + 16.0))
+    val = jnp.where(rho <= 0.0, jnp.dot(w, c),
+                    _g_of_lam(c, w, rho, jnp.exp(llam_new)))
+    return val, llam_new
 
 
 def robust_phi_objective(phi: Phi, w: jnp.ndarray, rho: float,
@@ -94,51 +178,22 @@ def robust_phi_objective(phi: Phi, w: jnp.ndarray, rho: float,
 
 
 # ---------------------------------------------------------------------------
-# JAX multi-start robust tuner
+# JAX multi-start robust tuner (delegates to the batched engine, P = 1)
 # ---------------------------------------------------------------------------
-
-@partial(jax.jit, static_argnames=("design", "sys", "n_starts", "steps", "lr"))
-def _tune_robust_batch(key, w, rho, design: DesignSpace, sys: LSMSystem,
-                       n_starts: int, steps: int, lr: float):
-    thetas = designs.random_inits(key, n_starts, design, sys)
-
-    def obj(theta):
-        phi = designs.to_phi(theta, design, sys, smooth=True)
-        return robust_phi_objective(phi, w, rho, sys, smooth=True)
-
-    best_t, _ = jax.vmap(lambda t0: minimize_adam(obj, t0, steps=steps,
-                                                  lr=lr))(thetas)
-
-    def exact_obj(theta):
-        phi = designs.to_phi(theta, design, sys, smooth=False)
-        phi = phi.round_integral(sys)
-        return robust_phi_objective(phi, w, rho, sys, smooth=False)
-
-    exact = jax.vmap(exact_obj)(best_t)
-    i = jnp.argmin(jnp.where(jnp.isfinite(exact), exact, jnp.inf))
-    return best_t[i], exact[i]
-
 
 def tune_robust(w, rho: float, sys: LSMSystem,
                 design: DesignSpace = DesignSpace.CLASSIC,
                 n_starts: int = 64, steps: int = 250, lr: float = 0.25,
                 seed: int = 0) -> TuningResult:
-    """ENDURE: solve ROBUST TUNING for ``design`` at uncertainty radius rho."""
-    w = jnp.asarray(w, jnp.float32)
-    rho = float(rho)
-    if design is DesignSpace.CLASSIC:
-        cands = [tune_robust(w, rho, sys, d, n_starts, steps, lr, seed)
-                 for d in (DesignSpace.LEVELING, DesignSpace.TIERING)]
-        return min(cands, key=lambda r: r.cost)
+    """ENDURE: solve ROBUST TUNING for ``design`` at uncertainty radius rho.
 
-    key = jax.random.PRNGKey(seed)
-    theta, _ = _tune_robust_batch(key, w, jnp.asarray(rho, jnp.float32),
-                                  design, sys, n_starts, steps, lr)
-    raw_phi = designs.to_phi(theta, design, sys, smooth=False)
-    phi = raw_phi.round_integral(sys)
-    cost = float(robust_phi_objective(phi, w, rho, sys))
-    return TuningResult(phi=phi, cost=cost, design=design, raw_phi=raw_phi,
-                        solver="jax")
+    Thin wrapper over :func:`repro.core.batch.tune_robust_many` with a
+    1x1 (workload, rho) grid; CLASSIC is folded into a single padded batch
+    axis there rather than solved as two recursive calls.
+    """
+    from .batch import tune_robust_many  # local import: batch imports us
+    return tune_robust_many([w], [rho], sys, design=design, n_starts=n_starts,
+                            steps=steps, lr=lr, seed=seed)[0][0]
 
 
 def tune_robust_slsqp(w, rho: float, sys: LSMSystem,

@@ -12,6 +12,7 @@ import math
 import numpy as np
 
 _SPLITMIX_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_MASK64 = (1 << 64) - 1
 
 
 def splitmix64(x: np.ndarray, seed: np.uint64) -> np.ndarray:
@@ -21,6 +22,18 @@ def splitmix64(x: np.ndarray, seed: np.uint64) -> np.ndarray:
         z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
         z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
         return z ^ (z >> np.uint64(31))
+
+
+def splitmix64_scalar(x: int, seed: int) -> int:
+    """Scalar splitmix64 on Python ints; bit-identical to :func:`splitmix64`.
+
+    The per-probe hot path (one call per hash function per run per point
+    lookup) — avoids allocating a 1-element numpy array per probe.
+    """
+    z = (x + seed * 0x9E3779B97F4A7C15) & _MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+    return z ^ (z >> 31)
 
 
 class BloomFilter:
@@ -46,10 +59,12 @@ class BloomFilter:
         self.words = words
 
     def might_contain(self, key: int) -> bool:
-        key_arr = np.asarray([key], np.uint64)
-        for j in range(self.k):
-            h = int(splitmix64(key_arr, np.uint64(j + 1))[0] % self.n_bits)
-            if not (int(self.words[h >> 6]) >> (h & 63)) & 1:
+        key = int(key)
+        words = self.words
+        n_bits = self.n_bits
+        for j in range(1, self.k + 1):
+            h = splitmix64_scalar(key, j) % n_bits
+            if not (int(words[h >> 6]) >> (h & 63)) & 1:
                 return False
         return True
 

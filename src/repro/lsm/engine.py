@@ -261,6 +261,25 @@ class LSMTree:
     def delete(self, key: int) -> None:
         self.put(key, TOMBSTONE)
 
+    def put_batch(self, keys, values: Sequence[Any]) -> None:
+        """Bulk insert in buffer-sized chunks; equivalent to sequential
+        :meth:`put` calls without the per-key Python overhead: same flush
+        boundaries (chunks are cut to the buffer's remaining room) and same
+        newest-wins semantics (insertion order is preserved, so later
+        duplicates overwrite earlier ones; :meth:`flush` sorts each run)."""
+        keys = np.asarray(keys, np.uint64)
+        i, n = 0, len(keys)
+        if len(values) != n:
+            raise ValueError(f"put_batch: {n} keys but {len(values)} values")
+        while i < n:
+            room = max(1, self.cfg.buf_entries - len(self.buffer))
+            chunk = keys[i:i + room]
+            self.buffer.update(zip(chunk.tolist(), values[i:i + room]))
+            self.stats.queries["w"] += len(chunk)
+            i += len(chunk)
+            if len(self.buffer) >= self.cfg.buf_entries:
+                self.flush()
+
     def flush(self) -> None:
         if not self.buffer:
             return
@@ -327,6 +346,56 @@ class LSMTree:
         found, val, _ = self._get_impl(key)
         self.stats.queries["z1" if found else "z0"] += 1
         return val
+
+    def point_query_batch(self, keys) -> List[Optional[Any]]:
+        """Classified point queries for a key batch, one vectorized Bloom
+        probe (``might_contain_batch``) + one ``searchsorted`` per run instead
+        of per-key Python loops.  Equivalent to ``[point_query(k) for k in
+        keys]``: same run visit order (newest -> oldest), same I/O and
+        bloom-probe accounting, same z0/z1 classification."""
+        keys_arr = np.asarray(keys, np.uint64)
+        n = len(keys_arr)
+        results: List[Optional[Any]] = [None] * n
+        resolved = np.zeros(n, bool)
+        found = np.zeros(n, bool)
+        for idx in range(n):
+            kk = int(keys_arr[idx])
+            if kk in self.buffer:
+                v = self.buffer[kk]
+                resolved[idx] = True
+                if v is not TOMBSTONE:
+                    found[idx] = True
+                    results[idx] = v
+        for lv in self.levels:
+            for run in lv.runs:  # newest -> oldest, as in _get_impl
+                active = np.nonzero(~resolved)[0]
+                if active.size == 0:
+                    break
+                sub = keys_arr[active]
+                self.stats.bloom_probes += int(active.size)
+                pos = run.bloom.might_contain_batch(sub)
+                if not pos.any():
+                    continue
+                probe_idx = active[pos]
+                pk = sub[pos]
+                self.stats.random_reads += int(pos.sum())
+                loc = np.searchsorted(run.keys, pk)
+                inb = loc < len(run.keys)
+                eq = np.zeros(len(pk), bool)
+                eq[inb] = run.keys[loc[inb]] == pk[inb]
+                self.stats.bloom_false_positives += int(len(pk) - eq.sum())
+                for gi, li in zip(probe_idx[eq], loc[eq]):
+                    v = run.values[li]
+                    resolved[gi] = True
+                    if v is not TOMBSTONE:
+                        found[gi] = True
+                        results[gi] = v
+            if not (~resolved).any():
+                break
+        nz1 = int(found.sum())
+        self.stats.queries["z1"] += nz1
+        self.stats.queries["z0"] += n - nz1
+        return results
 
     def range_query(self, lo: int, hi: int) -> List[Tuple[int, Any]]:
         self.stats.queries["q"] += 1

@@ -1,0 +1,160 @@
+"""Tests for the batched tuning engine (core/batch.py) and the warm-started
+robust dual solve (core/robust.py: dual_solve_cold / dual_solve_warm).
+
+The batched API must reproduce the sequential tuners seed-for-seed: same
+costs, identical integral Phi for CLASSIC (where both LEVELING/TIERING
+branches are folded onto one batch axis).  The warm-started dual must keep
+the ~zero primal-dual gap (Lemma 1) that the cold grid solve has.
+
+Deliberately hypothesis-free (the module must collect in minimal envs);
+solver sizes are small so the whole file compiles + runs in ~a minute on CPU.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EXPECTED_WORKLOADS, DesignSpace, LSMSystem,
+                        cost_vector, dual_solve_cold, dual_solve_warm,
+                        make_phi, robust_cost, to_phi, to_phi_policy,
+                        tune_nominal, tune_nominal_many, tune_robust,
+                        tune_robust_many, worst_case_workload)
+
+SYS = LSMSystem()
+SMALL = dict(n_starts=8, steps=60, seed=3)
+RHOS = (0.25, 1.0, 3.0)
+WS = EXPECTED_WORKLOADS[[1, 7, 11]]
+
+
+def _assert_same_phi(a, b):
+    assert float(a.phi.T) == float(b.phi.T)
+    assert np.allclose(np.asarray(a.phi.K), np.asarray(b.phi.K))
+    assert float(a.phi.mfilt_bits) == pytest.approx(
+        float(b.phi.mfilt_bits), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Batched vs sequential tuners
+# ---------------------------------------------------------------------------
+
+def test_nominal_many_matches_sequential_classic():
+    batched = tune_nominal_many(WS, SYS, **SMALL)
+    for k, w in enumerate(WS):
+        seq = tune_nominal(w, SYS, **SMALL)
+        assert batched[k].cost == pytest.approx(seq.cost, rel=1e-4)
+        assert batched[k].design is seq.design
+        _assert_same_phi(batched[k], seq)
+
+
+def test_nominal_many_matches_sequential_fluid():
+    batched = tune_nominal_many(WS[:2], SYS, DesignSpace.FLUID, **SMALL)
+    for k, w in enumerate(WS[:2]):
+        seq = tune_nominal(w, SYS, DesignSpace.FLUID, **SMALL)
+        assert batched[k].cost == pytest.approx(seq.cost, rel=1e-4)
+        _assert_same_phi(batched[k], seq)
+
+
+def test_robust_many_matches_sequential_grid():
+    W2 = WS[1:]
+    batched = tune_robust_many(W2, RHOS, SYS, **SMALL)
+    for i, w in enumerate(W2):
+        for j, rho in enumerate(RHOS):
+            seq = tune_robust(w, rho, SYS, **SMALL)
+            assert batched[i][j].cost == pytest.approx(seq.cost, rel=1e-4)
+            assert batched[i][j].design is seq.design
+            _assert_same_phi(batched[i][j], seq)
+
+
+def test_robust_zero_rho_matches_nominal_batched():
+    rn = tune_nominal_many([WS[2]], SYS, **SMALL)[0]
+    rr = tune_robust_many([WS[2]], [0.0], SYS, **SMALL)[0][0]
+    assert rr.cost == pytest.approx(rn.cost, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fused cost_vector (the hot path under every tuner lane) == components
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("smooth", [False, True])
+def test_cost_vector_fused_matches_components(smooth):
+    from repro.core.lsm_cost import (empty_read_cost, nonempty_read_cost,
+                                     range_cost, write_cost)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        T = float(rng.uniform(2.0, 90.0))
+        h = float(rng.uniform(0.0, 9.9))
+        K = float(rng.uniform(1.0, T))
+        phi = make_phi(T, h * SYS.N, K, SYS)
+        fused = np.asarray(cost_vector(phi, SYS, smooth=smooth))
+        parts = np.asarray([
+            empty_read_cost(phi, SYS, smooth=smooth),
+            nonempty_read_cost(phi, SYS, smooth=smooth),
+            range_cost(phi, SYS, smooth=smooth),
+            write_cost(phi, SYS, smooth=smooth)])
+        np.testing.assert_allclose(fused, parts, rtol=1e-6, atol=0.0)
+
+
+# ---------------------------------------------------------------------------
+# CLASSIC fold: the policy-axis to_phi
+# ---------------------------------------------------------------------------
+
+def test_to_phi_policy_reproduces_classic_branches():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        theta = jnp.asarray(rng.uniform(-3, 3, 2), jnp.float32)
+        lev = to_phi(theta, DesignSpace.LEVELING, SYS)
+        tier = to_phi(theta, DesignSpace.TIERING, SYS)
+        lev_p = to_phi_policy(theta, jnp.asarray(0.0, jnp.float32), SYS)
+        tier_p = to_phi_policy(theta, jnp.asarray(1.0, jnp.float32), SYS)
+        for a, b in ((lev, lev_p), (tier, tier_p)):
+            assert float(a.T) == pytest.approx(float(b.T), rel=1e-6)
+            assert float(a.mfilt_bits) == pytest.approx(float(b.mfilt_bits),
+                                                        rel=1e-6)
+            assert np.allclose(np.asarray(a.K), np.asarray(b.K))
+
+
+# ---------------------------------------------------------------------------
+# Warm-started dual: primal-dual gap stays ~zero along a trajectory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rho", RHOS)
+def test_warm_dual_gap_near_zero(rho):
+    w = jnp.asarray(EXPECTED_WORKLOADS[7], jnp.float32)
+    phi = make_phi(8.0, 0.8 * SYS.m_total_bits, 1.0, SYS)
+    c = np.asarray(cost_vector(phi, SYS), np.float32)
+    _, llam = dual_solve_cold(jnp.asarray(c), w, rho)
+    rng = np.random.default_rng(int(rho * 10))
+    for _ in range(25):
+        # small multiplicative drift, like successive Adam iterates
+        c = c * (1.0 + rng.normal(0.0, 0.01, 4)).astype(np.float32)
+        val, llam = dual_solve_warm(jnp.asarray(c), w, rho, llam)
+        w_hat = worst_case_workload(jnp.asarray(c), w, rho)
+        primal = float(jnp.dot(w_hat, jnp.asarray(c)))
+        assert float(val) == pytest.approx(primal, rel=2e-3, abs=1e-4)
+        # and it agrees with the exact cold-grid solve
+        cold = float(robust_cost(jnp.asarray(c), w, rho))
+        assert float(val) == pytest.approx(cold, rel=2e-3, abs=1e-4)
+
+
+def test_warm_dual_rho_zero_is_nominal():
+    w = jnp.asarray(EXPECTED_WORKLOADS[7], jnp.float32)
+    c = jnp.asarray([1.0, 3.0, 2.0, 7.0], jnp.float32)
+    _, llam = dual_solve_cold(c, w, 0.0)
+    for _ in range(5):
+        val, llam = dual_solve_warm(c, w, 0.0, llam)
+    assert float(val) == pytest.approx(float(jnp.dot(w, c)), rel=1e-5)
+    assert np.isfinite(float(llam))
+
+
+def test_warm_dual_recovers_from_bad_carry():
+    """Even a badly off-center carry re-locks within a few warm steps
+    (the window re-centers by half_width per step)."""
+    w = jnp.asarray(EXPECTED_WORKLOADS[7], jnp.float32)
+    c = jnp.asarray([1.0, 3.0, 2.0, 7.0], jnp.float32)
+    rho = 1.0
+    exact = float(robust_cost(c, w, rho))
+    _, llam_good = dual_solve_cold(c, w, rho)
+    llam = llam_good + 6.0  # six nats off
+    for _ in range(12):
+        val, llam = dual_solve_warm(c, w, rho, llam)
+    assert float(val) == pytest.approx(exact, rel=2e-3)
