@@ -5,10 +5,18 @@ Usage:
     PYTHONPATH=src python -m benchmarks.run                  # all
     PYTHONPATH=src python -m benchmarks.run fig6 tab5        # substring filter
     PYTHONPATH=src python -m benchmarks.run --json out/      # + BENCH_*.json
+    PYTHONPATH=src python -m benchmarks.run --check tuner tab5   # perf gate
 
 ``--json OUT`` writes one ``BENCH_<suite>.json`` per executed suite into the
 OUT directory: per-suite wall time plus every row's derived metrics, so later
 PRs have a machine-readable perf trajectory to compare against.
+
+``--check`` re-runs the selected suites and diffs the measured perf
+trajectory against the committed ``BENCH_<suite>.json`` baselines
+(``--baseline DIR``, default the repo root): per-suite wall time plus the
+curated directional metrics in ``CHECK_METRICS`` must stay within
+``--tolerance`` (default 1.5x slack for machine noise) of the baseline.
+Exits nonzero on any regression — the CI perf gate.
 """
 
 import argparse
@@ -17,6 +25,72 @@ import math
 import os
 import time
 import traceback
+
+# suite -> {"row_name.metric": "lower"|"higher"} perf metrics the --check
+# gate enforces in addition to every suite's wall_time_s ("lower").
+CHECK_METRICS = {
+    "tuner": {
+        "perf_tuner_fig6_grid.batched_s": "lower",
+        "perf_tuner_throughput.tunings_per_sec": "higher",
+    },
+    "tab5": {
+        "tab5_fleet.engine_s": "lower",
+    },
+}
+
+
+def _load_baselines(suites, baseline_dir):
+    """Snapshot every baseline BEFORE any suite runs (or --json rewrites
+    them): with OUT == baseline dir the gate would otherwise compare each
+    fresh BENCH_<suite>.json against itself and pass vacuously."""
+    out = {}
+    for key, _ in suites:
+        path = os.path.join(baseline_dir, f"BENCH_{key}.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                out[key] = json.load(f)
+    return out
+
+
+def _check_suite(key, rows, wall, base, tol):
+    """Compare one executed suite against its committed baseline.
+
+    Returns a list of human-readable regression strings (empty = pass)."""
+    if base is None:
+        return [f"{key}: no baseline BENCH_{key}.json"]
+    regressions = []
+
+    def compare(label, measured, reference, direction, slack=1.0):
+        if not isinstance(measured, (int, float)) or \
+                not isinstance(reference, (int, float)) or reference <= 0:
+            return
+        ratio = measured / reference
+        t = tol * slack
+        bad = ratio > t if direction == "lower" else ratio < 1.0 / t
+        status = "REGRESSION" if bad else "ok"
+        print(f"# check {label}: {measured:.4g} vs baseline "
+              f"{reference:.4g} ({direction} is better) [{status}]")
+        if bad:
+            regressions.append(f"{label}: {measured:.4g} vs {reference:.4g}")
+
+    # wall time gates at double slack: absolute seconds vary with the host
+    # (laptop vs CI runner, cold jit caches); the curated relative metrics
+    # below are the primary signal
+    compare(f"{key}.wall_time_s", wall, base.get("wall_time_s"), "lower",
+            slack=2.0)
+    derived_by_row = {r.name: r.derived for r in rows}
+    base_by_row = {r["name"]: r.get("derived", {})
+                   for r in base.get("rows", [])}
+    for spec, direction in CHECK_METRICS.get(key, {}).items():
+        row_name, metric = spec.rsplit(".", 1)
+        measured = derived_by_row.get(row_name, {}).get(metric)
+        reference = base_by_row.get(row_name, {}).get(metric)
+        if measured is None or reference is None:
+            regressions.append(f"{spec}: missing "
+                               f"({'run' if measured is None else 'baseline'})")
+            continue
+        compare(spec, float(measured), float(reference), direction)
+    return regressions
 
 
 def _jsonable(x):
@@ -47,6 +121,16 @@ def main() -> None:
                         help="substring filters on suite names")
     parser.add_argument("--json", metavar="OUT", default=None,
                         help="directory to write per-suite BENCH_<suite>.json")
+    parser.add_argument("--check", action="store_true",
+                        help="diff measured perf against committed baselines; "
+                             "exit nonzero on regression")
+    parser.add_argument("--baseline", metavar="DIR",
+                        default=os.path.join(os.path.dirname(__file__), ".."),
+                        help="baseline directory for --check "
+                             "(default: repo root)")
+    parser.add_argument("--tolerance", type=float, default=1.5,
+                        help="--check slack factor on every metric "
+                             "(default 1.5x)")
     args = parser.parse_args()
 
     from . import (bench_entry_size, bench_flexible_robustness,
@@ -67,8 +151,10 @@ def main() -> None:
     ]
     if args.json:
         os.makedirs(args.json, exist_ok=True)
+    baselines = _load_baselines(suites, args.baseline) if args.check else {}
     print("name,us_per_call,derived")
     failures = 0
+    all_regressions = []
     for key, mod in suites:
         if args.filters and not any(f in key for f in args.filters):
             continue
@@ -99,8 +185,17 @@ def main() -> None:
                 json.dump(payload, f, indent=1, sort_keys=True,
                           allow_nan=False)
             print(f"# wrote {path}", flush=True)
+        if args.check and error is None:
+            all_regressions += _check_suite(key, rows, wall,
+                                            baselines.get(key),
+                                            args.tolerance)
     if failures:
         raise SystemExit(f"{failures} benchmark suites failed")
+    if args.check:
+        if all_regressions:
+            raise SystemExit("perf regressions vs committed baselines:\n  "
+                             + "\n  ".join(all_regressions))
+        print("# --check passed: no perf regressions", flush=True)
 
 
 if __name__ == "__main__":

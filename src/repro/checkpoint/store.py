@@ -21,13 +21,13 @@ import dataclasses
 import hashlib
 import json
 import pathlib
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LSMSystem, tune_robust
+from repro.core import LSMSystem, tune_robust_many
 from repro.lsm import EngineConfig, LSMTree
 
 
@@ -51,20 +51,51 @@ def framework_storage_workload(ckpt_interval: int, restore_prob: float,
     return v / v.sum()
 
 
+def tuned_manifest_trees(specs: Sequence[Dict[str, Any]],
+                         seed: int = 0) -> list:
+    """Deploy ENDURE-tuned manifests for a whole fleet in ONE tuner dispatch.
+
+    ``specs`` is a sequence of dicts with the :func:`tuned_manifest_tree`
+    keywords (``expected_entries``, ``ckpt_interval``, ``restore_prob``,
+    ``rho``).  A re-tuning storm — every store in a fleet re-deriving its
+    manifest tuning after a config/workload shift — becomes one
+    ``tune_robust_many`` grid per distinct store size instead of a
+    per-(workload, rho) ``tune_robust`` loop: workloads batch on one axis,
+    distinct rhos on the other, and each spec picks its (workload, rho)
+    cell.  Specs sharing ``expected_entries`` share a compiled sweep."""
+    trees: list = [None] * len(specs)
+    by_n: Dict[int, list] = {}
+    for i, spec in enumerate(specs):
+        by_n.setdefault(int(spec.get("expected_entries", 50_000)),
+                        []).append(i)
+    for n_entries, idxs in by_n.items():
+        sys_small = LSMSystem(N=float(n_entries), entry_bits=256 * 8,
+                              page_bits=4096 * 8, bits_per_entry=16.0,
+                              min_buf_bits=256 * 8 * 64, s_rq=2e-5)
+        W = [framework_storage_workload(
+            specs[i].get("ckpt_interval", 100),
+            specs[i].get("restore_prob", 0.3)) for i in idxs]
+        rhos = [float(specs[i].get("rho", 1.0)) for i in idxs]
+        uniq = sorted(set(rhos))
+        grid = tune_robust_many(np.stack(W), uniq, sys_small, seed=seed)
+        for row, i, rho in zip(grid, idxs, rhos):
+            tuning = row[uniq.index(rho)]
+            trees[i] = LSMTree.from_phi(tuning.phi, sys_small,
+                                        expected_entries=n_entries,
+                                        entry_bytes=256)
+    return trees
+
+
 def tuned_manifest_tree(expected_entries: int = 50_000,
                         ckpt_interval: int = 100,
                         restore_prob: float = 0.3,
                         rho: float = 1.0,
                         seed: int = 0) -> LSMTree:
     """An LSM manifest whose (T, K, memory split) comes from ENDURE."""
-    sys_small = LSMSystem(N=float(expected_entries), entry_bits=256 * 8,
-                          page_bits=4096 * 8, bits_per_entry=16.0,
-                          min_buf_bits=256 * 8 * 64, s_rq=2e-5)
-    w = framework_storage_workload(ckpt_interval, restore_prob)
-    tuning = tune_robust(w, rho, sys_small, seed=seed)
-    return LSMTree.from_phi(tuning.phi, sys_small,
-                            expected_entries=expected_entries,
-                            entry_bytes=256)
+    return tuned_manifest_trees([dict(expected_entries=expected_entries,
+                                      ckpt_interval=ckpt_interval,
+                                      restore_prob=restore_prob, rho=rho)],
+                                seed=seed)[0]
 
 
 @dataclasses.dataclass

@@ -59,19 +59,62 @@ def robust_layout(candidates: Sequence[LayoutCandidate], mix: np.ndarray,
 
     Discrete Phi -> exact enumeration; the inner max uses the same
     eta-eliminated dual as the LSM tuner (zero duality gap)."""
+    return robust_layout_sweep(candidates, mix, [rho])[0]
+
+
+def _grid_jit():
+    """Module-cached jitted (C, mix, R) -> worst-case grid (compiled once
+    per shape; a per-call lambda would re-trace on every invocation)."""
+    global _GRID_FN
+    if _GRID_FN is None:
+        import jax
+
+        def grid(C, mix, R):
+            inner = jax.vmap(lambda c, r: robust_cost(c, mix, r),
+                             in_axes=(None, 0))          # over rhos
+            return jax.vmap(inner, in_axes=(0, None))(C, R)  # over candidates
+
+        _GRID_FN = jax.jit(grid)
+    return _GRID_FN
+
+
+_GRID_FN = None
+
+
+def worst_case_grid(candidates: Sequence[LayoutCandidate], mix: np.ndarray,
+                    rhos: Sequence[float]) -> np.ndarray:
+    """(len(candidates), len(rhos)) worst-case costs in ONE device dispatch.
+
+    A re-tuning storm — every serving cell re-evaluating its layout after a
+    fleet-wide mix shift — is a (candidate x rho) grid of ``robust_cost``
+    duals; evaluating it as a vmap-over-vmap batch replaces per-cell jit
+    dispatch, the same batching the LSM tuner got in ``core.batch``."""
+    C = jnp.asarray(np.stack([c.step_costs for c in candidates]), jnp.float32)
+    R = jnp.asarray(np.asarray(rhos, np.float32))
     mix_j = jnp.asarray(mix, jnp.float32)
+    return np.asarray(_grid_jit()(C, mix_j, R))
+
+
+def robust_layout_sweep(candidates: Sequence[LayoutCandidate],
+                        mix: np.ndarray,
+                        rhos: Sequence[float]) -> List[LayoutCandidate]:
+    """The robust pick for every rho, from one batched worst-case grid.
+
+    Equivalent to ``[robust_layout(candidates, mix, rho) for rho in rhos]``
+    but the whole (candidate x rho) dual grid is a single jit; the returned
+    candidates carry ``worst_case`` / ``nominal_worst_case`` for the LAST
+    rho they were scored under (matching the sequential API)."""
+    grid = worst_case_grid(candidates, mix, rhos)
     nom = nominal_layout(candidates, mix)
-    nom_wc = float(robust_cost(jnp.asarray(nom.step_costs, jnp.float32),
-                               mix_j, rho))
-    best, best_wc = None, np.inf
-    for c in candidates:
-        wc = float(robust_cost(jnp.asarray(c.step_costs, jnp.float32),
-                               mix_j, rho))
-        c.worst_case = wc
-        c.nominal_worst_case = nom_wc
-        if wc < best_wc:
-            best, best_wc = c, wc
-    return best
+    nom_idx = next(i for i, c in enumerate(candidates) if c is nom)
+    picks = []
+    for j in range(grid.shape[1]):
+        best_i = int(np.argmin(grid[:, j]))
+        for i, c in enumerate(candidates):
+            c.worst_case = float(grid[i, j])
+            c.nominal_worst_case = float(grid[nom_idx, j])
+        picks.append(candidates[best_i])
+    return picks
 
 
 def adversarial_mix(candidate: LayoutCandidate, mix: np.ndarray,

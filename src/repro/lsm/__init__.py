@@ -1,10 +1,21 @@
-"""Executable LSM-tree storage engine with exact logical-I/O accounting."""
+"""Executable LSM-tree storage engine with exact logical-I/O accounting.
 
-from .bloom import BloomFilter, monkey_bits_per_key
+Three layers: a structure-of-arrays run store (:mod:`repro.lsm.store`), a
+plan-emitting compaction policy (:mod:`repro.lsm.planner`), and the batched
+engine + session executor (:mod:`repro.lsm.engine`,
+:mod:`repro.lsm.workload_runner`)."""
+
+from .bloom import BloomFilter, BloomPack, monkey_bits_per_key
 from .engine import EngineConfig, IOStats, LSMTree, TOMBSTONE
-from .workload_runner import (SessionResult, measured_cost_vector, populate,
+from .planner import KLSMPlanner, MergePlan
+from .store import RunStore, ValueCodec
+from .workload_runner import (SessionPlan, SessionResult, draw_keys,
+                              execute_session, materialize_session,
+                              measured_cost_vector, populate, run_fleet,
                               run_session)
 
-__all__ = ["BloomFilter", "monkey_bits_per_key", "EngineConfig", "IOStats",
-           "LSMTree", "TOMBSTONE", "SessionResult", "measured_cost_vector",
-           "populate", "run_session"]
+__all__ = ["BloomFilter", "BloomPack", "monkey_bits_per_key", "EngineConfig",
+           "IOStats", "LSMTree", "TOMBSTONE", "KLSMPlanner", "MergePlan",
+           "RunStore", "ValueCodec", "SessionPlan", "SessionResult",
+           "draw_keys", "execute_session", "materialize_session",
+           "measured_cost_vector", "populate", "run_fleet", "run_session"]

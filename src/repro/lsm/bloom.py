@@ -3,13 +3,27 @@
 Vectorized numpy implementation: build hashes all keys at once; probes are
 O(k) bit tests.  Hashing is splitmix64 with per-hash-function seeds, the same
 scheme the Pallas ``bloom_probe`` kernel mirrors (kernels/bloom_probe).
+
+Two probe granularities:
+
+* :class:`BloomFilter` — one filter over one run (scalar + batch probes);
+* :class:`BloomPack`   — the filters of every run of a level packed into one
+  padded ``(runs, words)`` bit matrix, probed for a whole key batch at once.
+  The splitmix hashes are shared across runs (every filter uses seeds
+  ``1..k``), so a level probe hashes each key ``k`` times total instead of
+  ``k x runs`` times, and the bit gathers are single fancy-index operations.
+  Bit-for-bit identical to probing each run's :class:`BloomFilter`.
 """
 
 from __future__ import annotations
 
 import math
+import sys as _sys
+from typing import Sequence, Tuple
 
 import numpy as np
+
+_LITTLE_ENDIAN = _sys.byteorder == "little"
 
 _SPLITMIX_GAMMA = np.uint64(0x9E3779B97F4A7C15)
 _MASK64 = (1 << 64) - 1
@@ -19,6 +33,19 @@ def splitmix64(x: np.ndarray, seed: np.uint64) -> np.ndarray:
     """Deterministic 64-bit mix; operates elementwise on uint64 arrays."""
     with np.errstate(over="ignore"):
         z = (x + seed * _SPLITMIX_GAMMA).astype(np.uint64)
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return z ^ (z >> np.uint64(31))
+
+
+def splitmix64_seeds(x: np.ndarray, kmax: int) -> np.ndarray:
+    """All k hash rounds at once: (kmax, len(x)) of splitmix64(x, j+1).
+
+    Row j is bit-identical to ``splitmix64(x, j + 1)``; one vectorized block
+    replaces the per-round Python loop on the probe hot path."""
+    seeds = np.arange(1, kmax + 1, dtype=np.uint64)[:, None]
+    with np.errstate(over="ignore"):
+        z = (x[None, :] + seeds * _SPLITMIX_GAMMA).astype(np.uint64)
         z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
         z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
         return z ^ (z >> np.uint64(31))
@@ -36,6 +63,39 @@ def splitmix64_scalar(x: int, seed: int) -> int:
     return z ^ (z >> 31)
 
 
+def bloom_params(n_keys: int, bits_per_key: float) -> Tuple[int, int]:
+    """(n_bits, k) for a run of ``n_keys`` keys — the engine-wide layout."""
+    n_bits = max(64, int(math.ceil(bits_per_key * max(n_keys, 1))))
+    k = max(1, int(round(bits_per_key * math.log(2))))
+    return n_bits, k
+
+
+def build_words(keys: np.ndarray, n_bits: int, k: int) -> np.ndarray:
+    """The packed bit array of a filter, fully vectorized.
+
+    Equivalent to k rounds of ``np.bitwise_or.at`` (the scatter-OR ufunc,
+    which is an order of magnitude slower because it loops in C per element):
+    all k x n bit positions are hashed at once, scattered into a bool bitmap,
+    and packed little-endian so bit ``b`` of word ``w`` is bit ``64w + b`` —
+    the exact layout the probes address."""
+    n_words = (n_bits + 63) // 64
+    n = len(keys)
+    if n == 0:
+        return np.zeros(n_words, np.uint64)
+    pos = splitmix64_seeds(keys, k) % np.uint64(n_bits)
+    if _LITTLE_ENDIAN:
+        bitmap = np.zeros(n_words * 64, bool)
+        bitmap[pos.ravel()] = True
+        return np.packbits(bitmap, bitorder="little").view(np.uint64)
+    pos = np.unique(pos.ravel())                  # sorted unique bit indices
+    words = np.zeros(n_words, np.uint64)
+    widx = (pos >> np.uint64(6)).astype(np.int64)
+    bits = np.uint64(1) << (pos & np.uint64(63))
+    starts = np.flatnonzero(np.r_[True, widx[1:] != widx[:-1]])
+    words[widx[starts]] = np.bitwise_or.reduceat(bits, starts)
+    return words
+
+
 class BloomFilter:
     """Standard Bloom filter over uint64 keys.
 
@@ -47,16 +107,8 @@ class BloomFilter:
     def __init__(self, keys: np.ndarray, bits_per_key: float):
         keys = np.asarray(keys, np.uint64)
         self.n_keys = len(keys)
-        n_bits = max(64, int(math.ceil(bits_per_key * max(self.n_keys, 1))))
-        self.n_bits = n_bits
-        self.k = max(1, int(round(bits_per_key * math.log(2))))
-        words = np.zeros((n_bits + 63) // 64, np.uint64)
-        if self.n_keys:
-            for j in range(self.k):
-                h = splitmix64(keys, np.uint64(j + 1)) % np.uint64(n_bits)
-                np.bitwise_or.at(words, (h >> np.uint64(6)).astype(np.int64),
-                                 np.uint64(1) << (h & np.uint64(63)))
-        self.words = words
+        self.n_bits, self.k = bloom_params(self.n_keys, bits_per_key)
+        self.words = build_words(keys, self.n_bits, self.k)
 
     def might_contain(self, key: int) -> bool:
         key = int(key)
@@ -81,6 +133,45 @@ class BloomFilter:
     @property
     def bits_used(self) -> int:
         return self.n_bits
+
+
+class BloomPack:
+    """All Bloom filters of one level, packed for whole-level batch probes.
+
+    ``words`` is a ``(runs, max_words)`` uint64 matrix (rows zero-padded to
+    the widest filter — padding words are never addressed because hashes are
+    reduced mod the row's own ``n_bits``).  :meth:`probe` answers "might run
+    r contain key b?" for every (run, key) pair with k shared hash rounds.
+    """
+
+    __slots__ = ("words", "n_bits", "ks", "n_runs")
+
+    def __init__(self, words_list: Sequence[np.ndarray],
+                 n_bits: Sequence[int], ks: Sequence[int]):
+        self.n_runs = len(words_list)
+        wmax = max((len(w) for w in words_list), default=0)
+        mat = np.zeros((self.n_runs, wmax), np.uint64)
+        for r, w in enumerate(words_list):
+            mat[r, :len(w)] = w
+        self.words = mat
+        self.n_bits = np.asarray(n_bits, np.uint64)
+        self.ks = np.asarray(ks, np.int64)
+
+    def probe(self, keys: np.ndarray) -> np.ndarray:
+        """(runs, batch) bool: bit-identical to per-run ``might_contain``."""
+        keys = np.asarray(keys, np.uint64)
+        R, B = self.n_runs, len(keys)
+        if R == 0 or B == 0:
+            return np.ones((R, B), bool)
+        kmax = int(self.ks.max())
+        h = splitmix64_seeds(keys, kmax)                    # (kmax, B)
+        hm = h[None, :, :] % self.n_bits[:, None, None]     # (R, kmax, B)
+        w = self.words[np.arange(self.n_runs)[:, None, None],
+                       (hm >> np.uint64(6)).astype(np.intp)]
+        bits = ((w >> (hm & np.uint64(63))) & np.uint64(1)).astype(bool)
+        # rounds past a run's own k never veto that run
+        bits |= np.arange(kmax)[None, :, None] >= self.ks[:, None, None]
+        return bits.all(axis=1)
 
 
 def monkey_bits_per_key(level: int, num_levels: int, T: float,

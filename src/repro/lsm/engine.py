@@ -6,6 +6,29 @@ compaction) with *exact logical-I/O accounting*, so that measured I/Os per
 query can be compared against the paper's cost model — the Section 9
 system-based evaluation, reproduced on CPU.
 
+Architecture: three explicit layers
+-----------------------------------
+* **Storage** (:mod:`repro.lsm.store`) — a structure-of-arrays run store:
+  each level keeps ALL of its runs in contiguous ``uint64`` key /
+  ``int64`` encoded-value arenas with run-boundary offsets, per-run fence
+  metadata, and per-run Bloom words packable into a level-wide bit matrix
+  (:class:`repro.lsm.bloom.BloomPack`).  Values are int64-encoded (inline
+  ints / interned objects / an integer tombstone sentinel), so merges and
+  tombstone drops are pure vector ops.
+* **Policy** (:mod:`repro.lsm.planner`) — a compaction planner that reads
+  level-occupancy arrays and emits :class:`repro.lsm.planner.MergePlan`
+  values (which runs -> which level, drop-tombstones flag) as plain data.
+  The K-LSM policy below is the only planner today; alternative triggers
+  from the compaction design-space taxonomy are new planners, not engine
+  changes.
+* **Execution** — this module's :class:`LSMTree` drives the
+  plan-execute-replan loop on the write path and owns the batched read
+  paths: ``point_query_batch`` probes a key batch against every run of a
+  level at once (one shared hash round per level, sequential-equivalent
+  I/O accounting) and ``range_query_batch`` runs one two-sided
+  ``searchsorted`` per run for a whole batch of ranges.  Sessions execute
+  on these primitives via :mod:`repro.lsm.workload_runner`.
+
 Per-level semantics (paper Section 4.2):
   * Level i holds at most ``K_i`` sorted runs and at most
     ``(T-1) * T^(i-1) * buf_entries`` entries.
@@ -29,11 +52,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .bloom import BloomFilter, monkey_bits_per_key
+from .bloom import monkey_bits_per_key
+from .planner import KLSMPlanner
+from .store import TOMB, RunData, RunStore, pages_of
 
 TOMBSTONE = object()
 
@@ -108,103 +133,14 @@ class EngineConfig:
         return max(1, int(math.ceil(math.log(ratio + 1, self.T))))
 
 
-class SortedRun:
-    """An immutable sorted run with fence pointers and a Bloom filter."""
-
-    __slots__ = ("keys", "values", "bloom", "entries_per_page", "flushes")
-
-    def __init__(self, keys: np.ndarray, values: np.ndarray,
-                 bits_per_key: float, entries_per_page: int,
-                 flushes: int = 1):
-        self.keys = np.asarray(keys, np.uint64)
-        self.values = values
-        self.bloom = BloomFilter(self.keys, bits_per_key)
-        self.entries_per_page = entries_per_page
-        self.flushes = flushes  # how many upstream flushes merged into this run
-
-    def __len__(self) -> int:
-        return len(self.keys)
-
-    @property
-    def num_pages(self) -> int:
-        return (len(self.keys) + self.entries_per_page - 1) \
-            // self.entries_per_page
-
-    def get(self, key: int, stats: IOStats) -> Tuple[bool, Optional[Any]]:
-        """(made_io_and_found, value). Bloom-negative runs cost nothing."""
-        stats.bloom_probes += 1
-        if not self.bloom.might_contain(key):
-            return False, None
-        stats.random_reads += 1  # fence pointer -> exactly one page read
-        i = int(np.searchsorted(self.keys, np.uint64(key)))
-        if i < len(self.keys) and int(self.keys[i]) == key:
-            return True, self.values[i]
-        stats.bloom_false_positives += 1
-        return False, None
-
-    def scan(self, lo: int, hi: int, stats: IOStats) -> List[Tuple[int, Any]]:
-        """Inclusive-lo, exclusive-hi scan; counts 1 seek + sequential pages."""
-        i = int(np.searchsorted(self.keys, np.uint64(lo), side="left"))
-        j = int(np.searchsorted(self.keys, np.uint64(hi), side="left"))
-        if i >= j:
-            return []
-        first_page = i // self.entries_per_page
-        last_page = (j - 1) // self.entries_per_page
-        stats.random_reads += 1                       # the seek
-        stats.seq_reads += last_page - first_page     # subsequent pages
-        return [(int(self.keys[t]), self.values[t]) for t in range(i, j)]
-
-
-class Level:
-    __slots__ = ("runs",)
-
-    def __init__(self):
-        self.runs: List[SortedRun] = []
-
-    @property
-    def entries(self) -> int:
-        return sum(len(r) for r in self.runs)
-
-
-def _merge_runs(runs: Sequence[SortedRun], bits_per_key: float,
-                entries_per_page: int, stats: IOStats,
-                drop_tombstones: bool = False) -> SortedRun:
-    """Sort-merge runs (newest first in ``runs``), newest version wins.
-
-    Tombstones are only *dropped* when merging into the deepest populated
-    level (otherwise older versions in deeper levels would resurface).
-    Counts compaction I/O."""
-    for r in runs:
-        stats.comp_pages_read += r.num_pages
-    all_keys = np.concatenate([r.keys for r in runs])
-    all_vals = np.concatenate(
-        [np.asarray(r.values, dtype=object) for r in runs])
-    # newest-wins: stable sort by key with recency priority = position in list
-    recency = np.concatenate(
-        [np.full(len(r), i) for i, r in enumerate(runs)])  # 0 = newest
-    order = np.lexsort((recency, all_keys))
-    keys_sorted = all_keys[order]
-    vals_sorted = all_vals[order]
-    keep = np.ones(len(keys_sorted), bool)
-    keep[1:] = keys_sorted[1:] != keys_sorted[:-1]  # first (newest) wins
-    keys_u = keys_sorted[keep]
-    vals_u = vals_sorted[keep]
-    if drop_tombstones:
-        live = np.array([v is not TOMBSTONE for v in vals_u], bool)
-        keys_u, vals_u = keys_u[live], vals_u[live]
-    out = SortedRun(keys_u, vals_u, bits_per_key, entries_per_page,
-                    flushes=sum(r.flushes for r in runs))
-    stats.comp_pages_written += out.num_pages
-    return out
-
-
 class LSMTree:
     """The engine. Keys: ints (uint64 range); values: arbitrary objects."""
 
     def __init__(self, config: EngineConfig):
         self.cfg = config
-        self.buffer: dict = {}
-        self.levels: List[Level] = [Level() for _ in range(64)]
+        self.buffer: dict = {}           # int key -> int64-encoded value
+        self.store = RunStore(config.entries_per_page)
+        self.planner = KLSMPlanner(config)
         self.stats = IOStats()
 
     # -- construction from a tuning -------------------------------------
@@ -246,15 +182,16 @@ class LSMTree:
             self.cfg.mfilt_bits_per_entry * self.cfg.expected_entries,
             float(self.cfg.expected_entries))
 
-    def _level_capacity(self, level: int) -> int:
-        return (self.cfg.T - 1) * self.cfg.T ** (level - 1) \
-            * self.cfg.buf_entries
-
     # -- write path --------------------------------------------------------
+
+    def _encode(self, value: Any) -> int:
+        if value is TOMBSTONE:
+            return TOMB
+        return self.store.codec.encode(value)
 
     def put(self, key: int, value: Any) -> None:
         self.stats.queries["w"] += 1
-        self.buffer[key] = value
+        self.buffer[int(key)] = self._encode(value)
         if len(self.buffer) >= self.cfg.buf_entries:
             self.flush()
 
@@ -268,13 +205,20 @@ class LSMTree:
         newest-wins semantics (insertion order is preserved, so later
         duplicates overwrite earlier ones; :meth:`flush` sorts each run)."""
         keys = np.asarray(keys, np.uint64)
-        i, n = 0, len(keys)
+        n = len(keys)
         if len(values) != n:
             raise ValueError(f"put_batch: {n} keys but {len(values)} values")
+        if isinstance(values, np.ndarray) and values.dtype.kind in "iu":
+            enc = self.store.codec.encode_many(values)
+        else:
+            # object dtypes route per-element so TOMBSTONE maps to TOMB
+            enc = np.fromiter((self._encode(v) for v in values), np.int64, n)
+        i = 0
         while i < n:
             room = max(1, self.cfg.buf_entries - len(self.buffer))
             chunk = keys[i:i + room]
-            self.buffer.update(zip(chunk.tolist(), values[i:i + room]))
+            self.buffer.update(zip(chunk.tolist(),
+                                   enc[i:i + room].tolist()))
             self.stats.queries["w"] += len(chunk)
             i += len(chunk)
             if len(self.buffer) >= self.cfg.buf_entries:
@@ -284,145 +228,261 @@ class LSMTree:
         if not self.buffer:
             return
         keys = np.fromiter(self.buffer.keys(), np.uint64, len(self.buffer))
+        vals = np.fromiter(self.buffer.values(), np.int64, len(self.buffer))
         order = np.argsort(keys)
-        keys = keys[order]
-        vals = np.asarray(list(self.buffer.values()), dtype=object)[order]
-        run = SortedRun(keys, vals, self._bits_per_key(1),
-                        self.cfg.entries_per_page)
-        self.stats.comp_pages_written += run.num_pages  # sequential flush
+        run = RunData.build(keys[order], vals[order], self._bits_per_key(1),
+                            flushes=1)
+        self.stats.comp_pages_written += pages_of(
+            len(run), self.cfg.entries_per_page)   # sequential flush
         self.buffer.clear()
         self._push_run(1, run)
 
-    def _push_run(self, level: int, run: SortedRun) -> None:
-        lv = self.levels[level - 1]
-        cap = self._level_capacity(level)
-        K = self.cfg.k_at(level)
-        if lv.entries + len(run) > cap and lv.entries > 0:
-            # Full-level compaction: merge everything, move to level + 1.
-            # Tombstones may be dropped iff nothing lives deeper.
-            deepest = all(not l.runs for l in self.levels[level:])
-            merged = _merge_runs([run] + lv.runs, self._bits_per_key(level + 1),
-                                 self.cfg.entries_per_page, self.stats,
-                                 drop_tombstones=deepest)
-            lv.runs = []
-            self._push_run(level + 1, merged)
+    def _push_run(self, level: int, run: RunData) -> None:
+        """Plan-execute-replan until the incoming run finds a home."""
+        while True:
+            occ = self.store.occupancy(min_levels=level)
+            plan = self.planner.plan_push(occ, level, len(run), run.flushes)
+            if plan.kind == "spill":
+                run = self.store.execute(plan, run, self.stats,
+                                         self._bits_per_key(level + 1))
+                level += 1
+                continue
+            bpk = self._bits_per_key(level)
+            self.store.execute(plan, run, self.stats, bpk)
+            for clamp in self.planner.plan_clamps(
+                    self.store.occupancy(min_levels=level), level):
+                self.store.execute(clamp, None, self.stats, bpk)
             return
-        # Eager-merge semantics: fill the active (newest) run up to the
-        # per-run flush capacity ceil((T-1)/K) flushes, else open a new run.
-        flush_cap = max(1, math.ceil((self.cfg.T - 1) / K))
-        if lv.runs and lv.runs[0].flushes + run.flushes <= flush_cap:
-            merged = _merge_runs([run, lv.runs[0]], self._bits_per_key(level),
-                                 self.cfg.entries_per_page, self.stats)
-            lv.runs[0] = merged
-        else:
-            lv.runs.insert(0, run)
-        # Respect the K_i cap if logical moves overfilled the level.
-        while len(lv.runs) > K:
-            merged = _merge_runs(lv.runs[:2], self._bits_per_key(level),
-                                 self.cfg.entries_per_page, self.stats)
-            lv.runs = [merged] + lv.runs[2:]
 
     # -- read path ----------------------------------------------------------
 
-    def get(self, key: int) -> Optional[Any]:
-        found, val, _ = self._get_impl(key)
-        return val if found else None
+    def _buffer_sorted(self) -> Tuple[np.ndarray, np.ndarray]:
+        bkeys = np.fromiter(self.buffer.keys(), np.uint64, len(self.buffer))
+        benc = np.fromiter(self.buffer.values(), np.int64, len(self.buffer))
+        order = np.argsort(bkeys)
+        return bkeys[order], benc[order]
 
-    def _get_impl(self, key: int):
-        if key in self.buffer:
-            v = self.buffer[key]
-            return (v is not TOMBSTONE), (None if v is TOMBSTONE else v), True
-        for lv in self.levels:
-            for run in lv.runs:  # newest -> oldest
-                found, val = run.get(key, self.stats)
-                if found:
-                    if val is TOMBSTONE:
-                        return False, None, False
-                    return True, val, False
-        return False, None, False
+    @staticmethod
+    def resolve_in_sorted(bkeys: np.ndarray, benc: np.ndarray,
+                          keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(hit, encoded) membership of ``keys`` in a sorted (keys, enc)
+        buffer view — the one buffer-resolution primitive shared by the
+        engine's read path and the session executor's window simulation."""
+        loc = np.searchsorted(bkeys, keys)
+        inb = loc < len(bkeys)
+        hit = np.zeros(len(keys), bool)
+        hit[inb] = bkeys[loc[inb]] == keys[inb]
+        henc = benc[loc[hit]] if hit.any() else np.empty(0, np.int64)
+        return hit, henc
+
+    def _lookup_batch(self, keys_arr: np.ndarray,
+                      resolved: Optional[np.ndarray] = None,
+                      found: Optional[np.ndarray] = None,
+                      enc: Optional[np.ndarray] = None,
+                      use_buffer: bool = True
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """(found, encoded_values) for a key batch.
+
+        Visits the buffer, then every level newest -> oldest.  Bloom probes
+        run as one whole-level :class:`BloomPack` probe, but probe /
+        random-read / false-positive counts follow the sequential visit
+        order (a key resolved by a newer run is not probed in older ones),
+        so ``IOStats`` is identical to per-key execution.
+
+        Callers that already resolved some keys upstream (the session
+        executor accounts an evolving write buffer itself) pass the partial
+        ``resolved``/``found``/``enc`` state and ``use_buffer=False``."""
+        n = len(keys_arr)
+        resolved = np.zeros(n, bool) if resolved is None else resolved
+        found = np.zeros(n, bool) if found is None else found
+        enc = np.zeros(n, np.int64) if enc is None else enc
+        if use_buffer and self.buffer:
+            if n == 1:        # scalar get/point_query: O(1) dict probe
+                v = self.buffer.get(int(keys_arr[0]))
+                if v is not None:
+                    resolved[0] = True
+                    found[0] = v != TOMB
+                    enc[0] = v
+            else:
+                bkeys, benc = self._buffer_sorted()
+                hit, henc = self.resolve_in_sorted(bkeys, benc, keys_arr)
+                if hit.any():
+                    resolved |= hit
+                    found[hit] = henc != TOMB
+                    enc[hit] = henc
+        stats = self.stats
+        for lv in self.store.levels:
+            R = lv.num_runs
+            if R == 0:
+                continue
+            sub = np.flatnonzero(~resolved)     # still-unresolved query ids
+            if sub.size == 0:
+                break
+            sub_keys = keys_arr[sub]
+            pos = lv.pack.probe(sub_keys)                # (R, len(sub))
+            sub_live = np.ones(len(sub), bool)           # unresolved, in-level
+            for r in range(R):                           # newest -> oldest
+                n_active = int(sub_live.sum())
+                if n_active == 0:
+                    break
+                stats.bloom_probes += n_active
+                pos_r = pos[r] & sub_live
+                n_pos = int(pos_r.sum())
+                if n_pos == 0:
+                    continue
+                stats.random_reads += n_pos   # fence pointer -> one page each
+                rkeys, rvals = lv.run_slice(r)
+                qk = sub_keys[pos_r]
+                loc = np.searchsorted(rkeys, qk)
+                inb = loc < len(rkeys)
+                eq = np.zeros(n_pos, bool)
+                eq[inb] = rkeys[loc[inb]] == qk[inb]
+                stats.bloom_false_positives += n_pos - int(eq.sum())
+                if eq.any():
+                    sidx = np.flatnonzero(pos_r)[eq]
+                    gidx = sub[sidx]
+                    venc = rvals[loc[eq]]
+                    sub_live[sidx] = False
+                    resolved[gidx] = True
+                    found[gidx] = venc != TOMB
+                    enc[gidx] = venc
+        return found, enc
+
+    def get(self, key: int) -> Optional[Any]:
+        found, enc = self._lookup_batch(np.asarray([key], np.uint64))
+        return self.store.codec.decode(enc[0]) if found[0] else None
 
     def point_query(self, key: int) -> Optional[Any]:
         """A classified point query (updates z0/z1 accounting)."""
-        found, val, _ = self._get_impl(key)
-        self.stats.queries["z1" if found else "z0"] += 1
-        return val
+        found, enc = self._lookup_batch(np.asarray([key], np.uint64))
+        self.stats.queries["z1" if found[0] else "z0"] += 1
+        return self.store.codec.decode(enc[0]) if found[0] else None
 
     def point_query_batch(self, keys) -> List[Optional[Any]]:
-        """Classified point queries for a key batch, one vectorized Bloom
-        probe (``might_contain_batch``) + one ``searchsorted`` per run instead
-        of per-key Python loops.  Equivalent to ``[point_query(k) for k in
-        keys]``: same run visit order (newest -> oldest), same I/O and
-        bloom-probe accounting, same z0/z1 classification."""
+        """Classified point queries for a key batch; equivalent to
+        ``[point_query(k) for k in keys]`` (same run visit order, same I/O
+        and bloom accounting, same z0/z1 classification)."""
         keys_arr = np.asarray(keys, np.uint64)
-        n = len(keys_arr)
-        results: List[Optional[Any]] = [None] * n
-        resolved = np.zeros(n, bool)
-        found = np.zeros(n, bool)
-        for idx in range(n):
-            kk = int(keys_arr[idx])
-            if kk in self.buffer:
-                v = self.buffer[kk]
-                resolved[idx] = True
-                if v is not TOMBSTONE:
-                    found[idx] = True
-                    results[idx] = v
-        for lv in self.levels:
-            for run in lv.runs:  # newest -> oldest, as in _get_impl
-                active = np.nonzero(~resolved)[0]
-                if active.size == 0:
-                    break
-                sub = keys_arr[active]
-                self.stats.bloom_probes += int(active.size)
-                pos = run.bloom.might_contain_batch(sub)
-                if not pos.any():
-                    continue
-                probe_idx = active[pos]
-                pk = sub[pos]
-                self.stats.random_reads += int(pos.sum())
-                loc = np.searchsorted(run.keys, pk)
-                inb = loc < len(run.keys)
-                eq = np.zeros(len(pk), bool)
-                eq[inb] = run.keys[loc[inb]] == pk[inb]
-                self.stats.bloom_false_positives += int(len(pk) - eq.sum())
-                for gi, li in zip(probe_idx[eq], loc[eq]):
-                    v = run.values[li]
-                    resolved[gi] = True
-                    if v is not TOMBSTONE:
-                        found[gi] = True
-                        results[gi] = v
-            if not (~resolved).any():
-                break
-        nz1 = int(found.sum())
-        self.stats.queries["z1"] += nz1
-        self.stats.queries["z0"] += n - nz1
+        found, enc = self.classify_point_batch(keys_arr)
+        results: List[Optional[Any]] = [None] * len(keys_arr)
+        idx = np.flatnonzero(found)
+        for i, v in zip(idx.tolist(),
+                        self.store.codec.decode_many(enc[idx])):
+            results[i] = v
         return results
 
+    def classify_point_batch(self, keys_arr: np.ndarray,
+                             resolved: Optional[np.ndarray] = None,
+                             found: Optional[np.ndarray] = None,
+                             enc: Optional[np.ndarray] = None,
+                             use_buffer: bool = True
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+        """The accounting core of :meth:`point_query_batch`, without
+        materializing a Python result list (the fleet executor's path)."""
+        found, enc = self._lookup_batch(keys_arr, resolved=resolved,
+                                        found=found, enc=enc,
+                                        use_buffer=use_buffer)
+        nz1 = int(found.sum())
+        self.stats.queries["z1"] += nz1
+        self.stats.queries["z0"] += len(keys_arr) - nz1
+        return found, enc
+
     def range_query(self, lo: int, hi: int) -> List[Tuple[int, Any]]:
-        self.stats.queries["q"] += 1
-        results: dict = {}
-        sources: List[List[Tuple[int, Any]]] = []
-        for lv in self.levels:
-            for run in lv.runs:
-                sources.append(run.scan(lo, hi, self.stats))
-        for src in reversed(sources):  # oldest first; newer overwrite
-            for k, v in src:
-                results[k] = v
-        for k in list(self.buffer.keys()):
-            if lo <= k < hi:
-                results[k] = self.buffer[k]
-        return sorted((k, v) for k, v in results.items()
-                      if v is not TOMBSTONE)
+        return self.range_query_batch([lo], [hi], return_results=True)[0]
+
+    def range_query_batch(self, los, his, return_results: bool = False
+                          ) -> Optional[List[List[Tuple[int, Any]]]]:
+        """A batch of inclusive-lo, exclusive-hi range queries.
+
+        Per run: one two-sided ``searchsorted`` for the whole batch; each
+        overlapping (query, run) pair counts 1 seek + sequential page reads,
+        exactly like the per-query path.  With ``return_results`` the
+        newest-wins merge across runs + buffer happens in one global
+        (query, key, recency) lexsort; without it (workload sessions discard
+        range results) only the accounting runs."""
+        los = np.asarray(los, np.uint64)
+        his = np.asarray(his, np.uint64)
+        Q = len(los)
+        self.stats.queries["q"] += Q
+        epp = self.cfg.entries_per_page
+        pieces = []                         # (qid, keys, vals, recency)
+        recency = 0
+        for lv in self.store.levels:
+            for r in range(lv.num_runs):    # newest -> oldest
+                if lv.run_len(r) == 0:
+                    recency += 1
+                    continue
+                # fence fast-path: runs no query overlaps cost nothing
+                if not ((los <= lv.max_keys[r]) & (his > lv.min_keys[r])
+                        ).any():
+                    recency += 1
+                    continue
+                rkeys, rvals = lv.run_slice(r)
+                i = np.searchsorted(rkeys, los, side="left")
+                j = np.searchsorted(rkeys, his, side="left")
+                ov = i < j
+                n_ov = int(ov.sum())
+                if n_ov:
+                    self.stats.random_reads += n_ov           # the seeks
+                    self.stats.seq_reads += int(
+                        ((j[ov] - 1) // epp - i[ov] // epp).sum())
+                    if return_results:
+                        idx, qid = _multi_ranges(i[ov], j[ov],
+                                                 np.flatnonzero(ov))
+                        pieces.append((qid, rkeys[idx], rvals[idx],
+                                       np.full(len(idx), recency, np.int64)))
+                recency += 1
+        if not return_results:
+            return None
+        if self.buffer:                     # newest of all: recency -1
+            bkeys, benc = self._buffer_sorted()
+            i = np.searchsorted(bkeys, los, side="left")
+            j = np.searchsorted(bkeys, his, side="left")
+            ov = i < j
+            if ov.any():
+                idx, qid = _multi_ranges(i[ov], j[ov], np.flatnonzero(ov))
+                pieces.append((qid, bkeys[idx], benc[idx],
+                               np.full(len(idx), -1, np.int64)))
+        results: List[List[Tuple[int, Any]]] = [[] for _ in range(Q)]
+        if not pieces:
+            return results
+        qid = np.concatenate([p[0] for p in pieces])
+        keys = np.concatenate([p[1] for p in pieces])
+        vals = np.concatenate([p[2] for p in pieces])
+        rec = np.concatenate([p[3] for p in pieces])
+        order = np.lexsort((rec, keys, qid))
+        qid, keys, vals = qid[order], keys[order], vals[order]
+        keep = np.ones(len(qid), bool)      # first (newest) version per
+        keep[1:] = (qid[1:] != qid[:-1]) | (keys[1:] != keys[:-1])  # (q, key)
+        sel = keep & (vals != TOMB)
+        qs = qid[sel].tolist()
+        ks = keys[sel].tolist()
+        vs = self.store.codec.decode_many(vals[sel])
+        for q, k, v in zip(qs, ks, vs):
+            results[q].append((k, v))
+        return results
 
     # -- introspection --------------------------------------------------------
 
     @property
     def num_entries(self) -> int:
-        return len(self.buffer) + sum(lv.entries for lv in self.levels)
+        return len(self.buffer) + self.store.total_entries
 
     def shape(self) -> List[Tuple[int, List[int]]]:
         """[(level, [run sizes])] for non-empty levels."""
-        return [(i + 1, [len(r) for r in lv.runs])
-                for i, lv in enumerate(self.levels) if lv.runs]
+        return self.store.shape()
 
     def filter_bits_in_use(self) -> int:
-        return sum(r.bloom.bits_used for lv in self.levels for r in lv.runs)
+        return self.store.filter_bits_in_use()
+
+
+def _multi_ranges(starts: np.ndarray, ends: np.ndarray, qids: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Flatten [starts, ends) index ranges into one gather-index array plus
+    the query id of every gathered element."""
+    lens = (ends - starts).astype(np.int64)
+    total = int(lens.sum())
+    offs = np.concatenate([np.zeros(1, np.int64), np.cumsum(lens)[:-1]])
+    idx = (np.arange(total, dtype=np.int64) - np.repeat(offs, lens)
+           + np.repeat(starts.astype(np.int64), lens))
+    return idx, np.repeat(qids, lens)

@@ -1,0 +1,97 @@
+"""Compaction planner: WHEN/WHAT to compact, as plain data.
+
+The policy layer of the LSM engine.  The planner never touches key arrays:
+it reads the store's level-occupancy arrays (entries, run counts, active-run
+flush lineage) and emits :class:`MergePlan` values; the store executes them
+with a vectorized lexsort-merge and the engine drives the
+plan-execute-replan loop.  This separation is the "compaction as data"
+view of the design-space taxonomy (Sarkar et al., "Constructing and
+Analyzing the LSM Compaction Design Space"): a trigger/granularity policy
+decoupled from merge execution, so alternative policies (size-ratio
+triggers, partial/partitioned compaction, lazy leveling) are new planners,
+not new engines.
+
+The one policy implemented is the paper's K-LSM semantics (Section 4.2),
+reproduced exactly:
+
+* **spill**  — a level that would exceed its entry capacity
+  ``(T-1) * T^(i-1) * buf_entries`` merges *every* run (plus the incoming
+  one) and pushes the result to level i+1; tombstones are dropped iff no
+  deeper level holds data;
+* **eager**  — otherwise the incoming run merges into the level's active
+  (newest) run while that run's flush lineage stays within the per-run cap
+  ``ceil((T-1) / K_i)`` ("we only merge runs or logically move them");
+* **move**   — otherwise the run is placed as the level's new active run;
+* **clamp**  — logical moves that overfill the ``K_i`` run cap merge the two
+  newest runs until the cap holds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MergePlan:
+    """One compaction step, as data.
+
+    ``kind``: "spill" | "eager" | "move" | "clamp".  ``run_ids`` are indices
+    into the level's newest-first run list that participate in the merge
+    (the incoming run, when present, is implicitly newest); ``target_level``
+    is where the output lands; ``drop_tombstones`` marks deepest-level
+    merges where deletes can be discarded for good."""
+
+    kind: str
+    level: int
+    run_ids: Tuple[int, ...]
+    target_level: int
+    drop_tombstones: bool = False
+
+
+def level_capacity(level: int, T: int, buf_entries: int) -> int:
+    return (T - 1) * T ** (level - 1) * buf_entries
+
+
+class KLSMPlanner:
+    """The paper's K-LSM trigger policy over an :class:`EngineConfig`."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def plan_push(self, occupancy, level: int, incoming_entries: int,
+                  incoming_flushes: int) -> MergePlan:
+        """Decide the fate of a run arriving at ``level``.
+
+        ``occupancy`` is the store's ``(entries, run_counts,
+        active_flushes)`` triple; entries beyond its length are empty."""
+        entries, run_counts, active_flushes = occupancy
+        n = len(entries)
+        lv_entries = int(entries[level - 1]) if level - 1 < n else 0
+        lv_runs = int(run_counts[level - 1]) if level - 1 < n else 0
+        cap = level_capacity(level, self.cfg.T, self.cfg.buf_entries)
+        if lv_entries + incoming_entries > cap and lv_entries > 0:
+            deepest = int(run_counts[level:].sum()) == 0
+            return MergePlan(kind="spill", level=level,
+                             run_ids=tuple(range(lv_runs)),
+                             target_level=level + 1,
+                             drop_tombstones=deepest)
+        K = self.cfg.k_at(level)
+        flush_cap = max(1, math.ceil((self.cfg.T - 1) / K))
+        if lv_runs > 0 and \
+                int(active_flushes[level - 1]) + incoming_flushes <= flush_cap:
+            return MergePlan(kind="eager", level=level, run_ids=(0,),
+                             target_level=level)
+        return MergePlan(kind="move", level=level, run_ids=(),
+                         target_level=level)
+
+    def plan_clamps(self, occupancy, level: int) -> List[MergePlan]:
+        """Merge-down plans restoring the K_i run cap after a move."""
+        _, run_counts, _ = occupancy
+        lv_runs = int(run_counts[level - 1]) if level - 1 < len(run_counts) \
+            else 0
+        K = self.cfg.k_at(level)
+        return [MergePlan(kind="clamp", level=level, run_ids=(0, 1),
+                          target_level=level)
+                for _ in range(max(0, lv_runs - K))]

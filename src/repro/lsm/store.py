@@ -1,0 +1,314 @@
+"""Structure-of-arrays run store: the storage layer of the LSM engine.
+
+Each populated level is a :class:`LevelStore` holding ALL of its runs as
+contiguous arenas — one ``uint64`` key array and one ``int64`` encoded-value
+array, with a ``starts`` offset table marking run boundaries (runs ordered
+newest -> oldest) — plus per-run fence metadata (min/max key, page count,
+flush lineage) and the per-run Bloom filter words, packable into a
+:class:`repro.lsm.bloom.BloomPack` bit matrix for whole-level batch probes.
+
+Values are *encoded*, never Python objects, so merges, tombstone drops, and
+result gathers are pure vector ops (see :class:`ValueCodec`): Python ints
+ride inline in the int64, everything else is interned, and deletes are the
+integer sentinel ``TOMB`` instead of a sentinel object.
+
+The store only *executes*: it places runs and applies
+:class:`repro.lsm.planner.MergePlan`s with a single vectorized
+lexsort-merge, counting exact logical compaction I/O into the engine's
+``IOStats``.  WHAT to merge and WHEN is decided by the planner; HOW keys are
+found is the engine's read path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .bloom import BloomPack, bloom_params, build_words
+
+#: Encoded-value sentinel for deletes.  Even (never an intern slot, those are
+#: non-negative evens) and negative, so it cannot collide with either inline
+#: ints (odd) or interned object ids.
+TOMB = -2
+
+_INLINE_MAX = 2 ** 62  # inline ints v are stored as 2v+1: |v| must fit
+
+
+class ValueCodec:
+    """Encode arbitrary Python values into int64 slots.
+
+    * ``int`` values with ``|v| < 2**62`` are stored inline as ``2v + 1``
+      (odd; arithmetic-shift decode, vectorizable);
+    * any other object is interned: slot ``2 * table_index`` (even, >= 0);
+    * deletes are :data:`TOMB`.
+
+    The hot paths (workload sessions, benchmarks) use int values and never
+    touch the intern table; object values (e.g. the checkpoint manifest's
+    JSON strings) intern transparently.
+
+    The intern table is append-only: slots whose runs were merged away are
+    not reclaimed, so a long-lived object-valued tree holds every value
+    version it ever saw (the pre-refactor engine freed them with the run
+    object-arrays).  That is a deliberate trade for vector-only merges —
+    manifest-scale object workloads are small; int workloads never intern.
+    """
+
+    __slots__ = ("objects",)
+
+    def __init__(self):
+        self.objects: List[Any] = []
+
+    def encode(self, value: Any) -> int:
+        # numpy integer scalars normalize to Python int (equal, not
+        # identical) rather than interning one slot per write; bool is an
+        # int subclass but keeps its identity through the intern table
+        if isinstance(value, (int, np.integer)) \
+                and not isinstance(value, bool) \
+                and -_INLINE_MAX < value < _INLINE_MAX:
+            return 2 * int(value) + 1
+        self.objects.append(value)
+        return 2 * (len(self.objects) - 1)
+
+    def encode_many(self, values) -> np.ndarray:
+        """Vectorized encode for integer arrays; falls back per-element."""
+        if isinstance(values, np.ndarray) and values.dtype.kind in "iu":
+            v = values.astype(np.int64, copy=False)
+            lo, hi = int(v.min(initial=0)), int(v.max(initial=0))
+            if -_INLINE_MAX < lo and hi < _INLINE_MAX and not (
+                    values.dtype.kind == "u"
+                    and int(values.max(initial=0)) >= _INLINE_MAX):
+                return 2 * v + 1
+        return np.fromiter((self.encode(v) for v in values), np.int64,
+                           len(values))
+
+    def decode(self, enc: int) -> Any:
+        enc = int(enc)
+        if enc & 1:
+            return enc >> 1
+        return self.objects[enc >> 1]
+
+    def decode_many(self, enc: np.ndarray) -> List[Any]:
+        """Decode a tombstone-free encoded array to a list of values."""
+        enc = np.asarray(enc, np.int64)
+        if len(enc) == 0 or bool((enc & 1).all()):
+            return (enc >> 1).tolist()
+        return [self.decode(e) for e in enc]
+
+
+def pages_of(entries: int, entries_per_page: int) -> int:
+    return (entries + entries_per_page - 1) // entries_per_page
+
+
+@dataclasses.dataclass
+class RunData:
+    """One immutable sorted run in transit (flush output / merge output).
+
+    The Bloom *parameters* (n_bits, k) are fixed at build time — they are
+    what the I/O accounting observes — but the filter words materialize
+    lazily on first probe: a run merged away before any read never pays the
+    k x n hashing cost (the write path never probes)."""
+
+    keys: np.ndarray          # uint64, sorted ascending, unique
+    vals: np.ndarray          # int64, encoded
+    flushes: int              # upstream flushes merged into this run
+    n_bits: int
+    k: int
+    words: Optional[np.ndarray] = None   # uint64 filter words, lazy
+
+    @classmethod
+    def build(cls, keys: np.ndarray, vals: np.ndarray, bits_per_key: float,
+              flushes: int) -> "RunData":
+        keys = np.asarray(keys, np.uint64)
+        n_bits, k = bloom_params(len(keys), bits_per_key)
+        return cls(keys=keys, vals=np.asarray(vals, np.int64),
+                   flushes=flushes, n_bits=n_bits, k=k)
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+
+class LevelStore:
+    """All runs of one level as SoA arenas + packed filter metadata."""
+
+    __slots__ = ("keys", "vals", "starts", "flushes", "n_bits", "ks",
+                 "words_list", "min_keys", "max_keys", "_pack")
+
+    def __init__(self):
+        self.keys = np.empty(0, np.uint64)
+        self.vals = np.empty(0, np.int64)
+        self.starts = np.zeros(1, np.int64)     # R+1 offsets, newest first
+        self.flushes: List[int] = []
+        self.n_bits: List[int] = []
+        self.ks: List[int] = []
+        self.words_list: List[np.ndarray] = []
+        self.min_keys = np.empty(0, np.uint64)
+        self.max_keys = np.empty(0, np.uint64)
+        self._pack: Optional[BloomPack] = None
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def num_runs(self) -> int:
+        return len(self.starts) - 1
+
+    @property
+    def entries(self) -> int:
+        return int(self.starts[-1])
+
+    def run_slice(self, r: int) -> Tuple[np.ndarray, np.ndarray]:
+        s, e = int(self.starts[r]), int(self.starts[r + 1])
+        return self.keys[s:e], self.vals[s:e]
+
+    def run_len(self, r: int) -> int:
+        return int(self.starts[r + 1] - self.starts[r])
+
+    def run_lens(self) -> List[int]:
+        return np.diff(self.starts).tolist()
+
+    @property
+    def pack(self) -> BloomPack:
+        if self._pack is None:
+            for r in range(self.num_runs):       # materialize lazy filters
+                if self.words_list[r] is None:
+                    keys, _ = self.run_slice(r)
+                    self.words_list[r] = build_words(keys, self.n_bits[r],
+                                                     self.ks[r])
+            self._pack = BloomPack(self.words_list, self.n_bits, self.ks)
+        return self._pack
+
+    # -- mutation ----------------------------------------------------------
+
+    def _set_runs(self, runs: Sequence[RunData]) -> None:
+        """Rebuild the arenas from a newest-first run list."""
+        if runs:
+            self.keys = np.concatenate([r.keys for r in runs])
+            self.vals = np.concatenate([r.vals for r in runs])
+        else:
+            self.keys = np.empty(0, np.uint64)
+            self.vals = np.empty(0, np.int64)
+        lens = np.fromiter((len(r) for r in runs), np.int64, len(runs))
+        self.starts = np.concatenate([np.zeros(1, np.int64), np.cumsum(lens)])
+        self.flushes = [r.flushes for r in runs]
+        self.n_bits = [r.n_bits for r in runs]
+        self.ks = [r.k for r in runs]
+        self.words_list = [r.words for r in runs]
+        self.min_keys = np.array([r.keys[0] if len(r) else 0 for r in runs],
+                                 np.uint64)
+        self.max_keys = np.array([r.keys[-1] if len(r) else 0 for r in runs],
+                                 np.uint64)
+        self._pack = None
+
+    def _as_rundata(self, r: int) -> RunData:
+        keys, vals = self.run_slice(r)
+        return RunData(keys=keys, vals=vals, flushes=self.flushes[r],
+                       n_bits=self.n_bits[r], k=self.ks[r],
+                       words=self.words_list[r])
+
+    def runs(self) -> List[RunData]:
+        return [self._as_rundata(r) for r in range(self.num_runs)]
+
+
+class RunStore:
+    """The tree's storage: one :class:`LevelStore` per populated level."""
+
+    def __init__(self, entries_per_page: int):
+        self.entries_per_page = entries_per_page
+        self.levels: List[LevelStore] = []
+        self.codec = ValueCodec()
+
+    # -- views --------------------------------------------------------------
+
+    def level(self, level: int) -> LevelStore:
+        """1-indexed accessor, growing the level list on demand."""
+        while len(self.levels) < level:
+            self.levels.append(LevelStore())
+        return self.levels[level - 1]
+
+    def occupancy(self, min_levels: int = 0):
+        """(entries, run_counts, active_flushes) arrays for the planner."""
+        n = max(len(self.levels), min_levels)
+        entries = np.zeros(n, np.int64)
+        run_counts = np.zeros(n, np.int64)
+        active_flushes = np.zeros(n, np.int64)
+        for i, lv in enumerate(self.levels):
+            entries[i] = lv.entries
+            run_counts[i] = lv.num_runs
+            if lv.num_runs:
+                active_flushes[i] = lv.flushes[0]
+        return entries, run_counts, active_flushes
+
+    @property
+    def total_entries(self) -> int:
+        return sum(lv.entries for lv in self.levels)
+
+    def shape(self) -> List[Tuple[int, List[int]]]:
+        return [(i + 1, lv.run_lens())
+                for i, lv in enumerate(self.levels) if lv.num_runs]
+
+    def filter_bits_in_use(self) -> int:
+        return sum(sum(lv.n_bits) for lv in self.levels)
+
+    # -- plan execution ------------------------------------------------------
+
+    def place_run(self, level: int, run: RunData) -> None:
+        """Logical move: prepend ``run`` as the level's new newest run."""
+        lv = self.level(level)
+        lv._set_runs([run] + lv.runs())
+
+    def merge(self, inputs: Sequence[RunData], bits_per_key: float,
+              stats, drop_tombstones: bool = False) -> RunData:
+        """Vectorized lexsort-merge (newest first in ``inputs``).
+
+        Exactly the legacy ``_merge_runs``: newest version of each key wins
+        via a stable (recency, key) lexsort; tombstones are dropped only when
+        the planner marked the merge as deepest; compaction I/O is counted
+        per input/output page."""
+        epp = self.entries_per_page
+        for r in inputs:
+            stats.comp_pages_read += pages_of(len(r), epp)
+        all_keys = np.concatenate([r.keys for r in inputs])
+        all_vals = np.concatenate([r.vals for r in inputs])
+        # Concatenation order IS recency order (inputs newest first), so a
+        # stable key sort leaves duplicates newest-first — equivalent to
+        # lexsort((recency, key)) at one sort over nearly-sorted data.
+        order = np.argsort(all_keys, kind="stable")
+        keys_sorted = all_keys[order]
+        vals_sorted = all_vals[order]
+        keep = np.ones(len(keys_sorted), bool)
+        keep[1:] = keys_sorted[1:] != keys_sorted[:-1]      # newest wins
+        keys_u = keys_sorted[keep]
+        vals_u = vals_sorted[keep]
+        if drop_tombstones:
+            live = vals_u != TOMB
+            keys_u, vals_u = keys_u[live], vals_u[live]
+        out = RunData.build(keys_u, vals_u, bits_per_key,
+                            flushes=sum(r.flushes for r in inputs))
+        stats.comp_pages_written += pages_of(len(out), epp)
+        return out
+
+    def execute(self, plan, incoming: Optional[RunData], stats,
+                bits_per_key: float) -> Optional[RunData]:
+        """Apply one MergePlan.  Returns the spill output (the run the engine
+        must re-push at ``plan.target_level``) or None for in-level plans."""
+        lv = self.level(plan.level)
+        if plan.kind == "spill":
+            merged = self.merge([incoming] + lv.runs(), bits_per_key, stats,
+                                drop_tombstones=plan.drop_tombstones)
+            lv._set_runs([])
+            return merged
+        if plan.kind == "eager":
+            runs = lv.runs()
+            runs[0] = self.merge([incoming, runs[0]], bits_per_key, stats)
+            lv._set_runs(runs)
+            return None
+        if plan.kind == "move":
+            self.place_run(plan.level, incoming)
+            return None
+        if plan.kind == "clamp":
+            runs = lv.runs()
+            merged = self.merge(runs[:2], bits_per_key, stats)
+            lv._set_runs([merged] + runs[2:])
+            return None
+        raise ValueError(f"unknown plan kind {plan.kind!r}")

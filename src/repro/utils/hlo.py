@@ -107,7 +107,11 @@ def _parse_instruction(line: str) -> Optional[Instruction]:
         if depth == 0:
             break
     args = rest[start + 1:i]
-    operands = [a.strip().lstrip("%") for a in _split_top(args)]
+    # An operand is either a bare reference ("%name" / "name") or, in newer
+    # XLA dumps, type-prefixed ("f32[32,128]{1,0} %name") — the reference is
+    # always the last whitespace-separated token.
+    operands = [a.strip().split()[-1].lstrip("%")
+                for a in _split_top(args) if a.strip()]
     return Instruction(name=name, op=op, type_str=type_str,
                        operands=[o for o in operands if o], line=line)
 

@@ -1,0 +1,489 @@
+"""Frozen pre-refactor (PR 1) LSM engine + session runner: the golden
+reference for the columnar-engine refactor.
+
+This is a verbatim snapshot of ``src/repro/lsm/engine.py`` and the
+``populate`` / ``run_session`` pair from ``src/repro/lsm/workload_runner.py``
+as of commit 6548ac7, with imports adjusted to be self-contained.  The
+equivalence tests in ``test_engine_golden.py`` assert that the rewritten
+store/planner/executor engine reproduces this implementation's ``IOStats``
+*exactly* on fixed-seed scenarios.  Do not "improve" this file — its only
+job is to stay identical to the engine it snapshots.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.lsm.bloom import BloomFilter, monkey_bits_per_key
+
+TOMBSTONE = object()
+
+
+@dataclasses.dataclass
+class IOStats:
+    random_reads: int = 0        # random page reads (point lookups, seeks)
+    seq_reads: int = 0           # sequential page reads (range scans)
+    comp_pages_read: int = 0     # compaction input pages (sequential)
+    comp_pages_written: int = 0  # compaction/flush output pages (sequential)
+    bloom_probes: int = 0
+    bloom_false_positives: int = 0
+    queries: dict = dataclasses.field(
+        default_factory=lambda: {"z0": 0, "z1": 0, "q": 0, "w": 0})
+
+    def snapshot(self) -> "IOStats":
+        return dataclasses.replace(self, queries=dict(self.queries))
+
+    def minus(self, other: "IOStats") -> "IOStats":
+        return IOStats(
+            random_reads=self.random_reads - other.random_reads,
+            seq_reads=self.seq_reads - other.seq_reads,
+            comp_pages_read=self.comp_pages_read - other.comp_pages_read,
+            comp_pages_written=self.comp_pages_written - other.comp_pages_written,
+            bloom_probes=self.bloom_probes - other.bloom_probes,
+            bloom_false_positives=self.bloom_false_positives
+            - other.bloom_false_positives,
+            queries={k: self.queries[k] - other.queries[k]
+                     for k in self.queries},
+        )
+
+    def io_per_query(self, f_a: float = 1.0, f_seq: float = 1.0) -> dict:
+        """Measured average logical I/O per query class, write-amortized the
+        way the paper does (compaction I/O redistributed over writes)."""
+        n = self.queries
+        reads = max(n["z0"] + n["z1"] + n["q"], 1)
+        out = {}
+        out["read_io"] = (self.random_reads + f_seq * self.seq_reads) / reads
+        writes = max(n["w"], 1)
+        out["write_io"] = (f_seq * (self.comp_pages_read
+                                    + f_a * self.comp_pages_written)) / writes
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    T: int = 4
+    K: Tuple[int, ...] = ()            # per-level caps; empty -> leveling
+    buf_entries: int = 1024            # memtable capacity (entries)
+    entry_bytes: int = 64
+    page_bytes: int = 4096
+    mfilt_bits_per_entry: float = 10.0  # Monkey budget, bits per *total* entry
+    expected_entries: int = 200_000     # N used for Monkey allocation + L
+
+    @property
+    def entries_per_page(self) -> int:
+        return max(1, self.page_bytes // self.entry_bytes)
+
+    def k_at(self, level: int) -> int:
+        """1-indexed level -> K_i, clamped to [1, T-1]."""
+        if level - 1 < len(self.K):
+            k = self.K[level - 1]
+        elif len(self.K) > 0:
+            k = self.K[-1]
+        else:
+            k = 1
+        return int(max(1, min(k, self.T - 1)))
+
+    @property
+    def est_levels(self) -> int:
+        ratio = self.expected_entries / self.buf_entries
+        return max(1, int(math.ceil(math.log(ratio + 1, self.T))))
+
+
+class SortedRun:
+    """An immutable sorted run with fence pointers and a Bloom filter."""
+
+    __slots__ = ("keys", "values", "bloom", "entries_per_page", "flushes")
+
+    def __init__(self, keys: np.ndarray, values: np.ndarray,
+                 bits_per_key: float, entries_per_page: int,
+                 flushes: int = 1):
+        self.keys = np.asarray(keys, np.uint64)
+        self.values = values
+        self.bloom = BloomFilter(self.keys, bits_per_key)
+        self.entries_per_page = entries_per_page
+        self.flushes = flushes  # how many upstream flushes merged into this run
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+    @property
+    def num_pages(self) -> int:
+        return (len(self.keys) + self.entries_per_page - 1) \
+            // self.entries_per_page
+
+    def get(self, key: int, stats: IOStats) -> Tuple[bool, Optional[Any]]:
+        """(made_io_and_found, value). Bloom-negative runs cost nothing."""
+        stats.bloom_probes += 1
+        if not self.bloom.might_contain(key):
+            return False, None
+        stats.random_reads += 1  # fence pointer -> exactly one page read
+        i = int(np.searchsorted(self.keys, np.uint64(key)))
+        if i < len(self.keys) and int(self.keys[i]) == key:
+            return True, self.values[i]
+        stats.bloom_false_positives += 1
+        return False, None
+
+    def scan(self, lo: int, hi: int, stats: IOStats) -> List[Tuple[int, Any]]:
+        """Inclusive-lo, exclusive-hi scan; counts 1 seek + sequential pages."""
+        i = int(np.searchsorted(self.keys, np.uint64(lo), side="left"))
+        j = int(np.searchsorted(self.keys, np.uint64(hi), side="left"))
+        if i >= j:
+            return []
+        first_page = i // self.entries_per_page
+        last_page = (j - 1) // self.entries_per_page
+        stats.random_reads += 1                       # the seek
+        stats.seq_reads += last_page - first_page     # subsequent pages
+        return [(int(self.keys[t]), self.values[t]) for t in range(i, j)]
+
+
+class Level:
+    __slots__ = ("runs",)
+
+    def __init__(self):
+        self.runs: List[SortedRun] = []
+
+    @property
+    def entries(self) -> int:
+        return sum(len(r) for r in self.runs)
+
+
+def _merge_runs(runs: Sequence[SortedRun], bits_per_key: float,
+                entries_per_page: int, stats: IOStats,
+                drop_tombstones: bool = False) -> SortedRun:
+    """Sort-merge runs (newest first in ``runs``), newest version wins.
+
+    Tombstones are only *dropped* when merging into the deepest populated
+    level (otherwise older versions in deeper levels would resurface).
+    Counts compaction I/O."""
+    for r in runs:
+        stats.comp_pages_read += r.num_pages
+    all_keys = np.concatenate([r.keys for r in runs])
+    all_vals = np.concatenate(
+        [np.asarray(r.values, dtype=object) for r in runs])
+    # newest-wins: stable sort by key with recency priority = position in list
+    recency = np.concatenate(
+        [np.full(len(r), i) for i, r in enumerate(runs)])  # 0 = newest
+    order = np.lexsort((recency, all_keys))
+    keys_sorted = all_keys[order]
+    vals_sorted = all_vals[order]
+    keep = np.ones(len(keys_sorted), bool)
+    keep[1:] = keys_sorted[1:] != keys_sorted[:-1]  # first (newest) wins
+    keys_u = keys_sorted[keep]
+    vals_u = vals_sorted[keep]
+    if drop_tombstones:
+        live = np.array([v is not TOMBSTONE for v in vals_u], bool)
+        keys_u, vals_u = keys_u[live], vals_u[live]
+    out = SortedRun(keys_u, vals_u, bits_per_key, entries_per_page,
+                    flushes=sum(r.flushes for r in runs))
+    stats.comp_pages_written += out.num_pages
+    return out
+
+
+class LSMTree:
+    """The engine. Keys: ints (uint64 range); values: arbitrary objects."""
+
+    def __init__(self, config: EngineConfig):
+        self.cfg = config
+        self.buffer: dict = {}
+        self.levels: List[Level] = [Level() for _ in range(64)]
+        self.stats = IOStats()
+
+    # -- construction from a tuning -------------------------------------
+
+    @classmethod
+    def from_phi(cls, phi, sys, expected_entries: int,
+                 buf_entries: Optional[int] = None,
+                 entry_bytes: int = 64, page_bytes: int = 4096) -> "LSMTree":
+        """Deploy a tuner-recommended Phi at reduced scale.
+
+        The *shape* of the tuning (T, K profile, filter bits/entry) carries
+        over; N/buffer are scaled to CPU-testable sizes with the memory split
+        preserved as bits-per-entry."""
+        import numpy as _np
+        T = int(float(phi.T))
+        K = tuple(int(k) for k in _np.asarray(phi.K))
+        m_total_bpe = sys.bits_per_entry
+        filt_bpe = float(phi.mfilt_bits) / sys.N
+        assert filt_bpe <= 1024, (
+            f"filter bits/entry = {filt_bpe:.3g}: `sys` must be the SAME "
+            "LSMSystem the tuning was produced under (mfilt_bits is "
+            "normalized by sys.N)")
+        buf_bpe = m_total_bpe - filt_bpe
+        if buf_entries is None:
+            # preserve buffer share: buf_bits = buf_bpe * N_small
+            buf_bits = buf_bpe * expected_entries
+            buf_entries = max(64, int(buf_bits / (entry_bytes * 8)))
+        cfg = EngineConfig(T=T, K=K, buf_entries=buf_entries,
+                           entry_bytes=entry_bytes, page_bytes=page_bytes,
+                           mfilt_bits_per_entry=filt_bpe,
+                           expected_entries=expected_entries)
+        return cls(cfg)
+
+    # -- bits allocation --------------------------------------------------
+
+    def _bits_per_key(self, level: int) -> float:
+        return monkey_bits_per_key(
+            level, self.cfg.est_levels, float(self.cfg.T),
+            self.cfg.mfilt_bits_per_entry * self.cfg.expected_entries,
+            float(self.cfg.expected_entries))
+
+    def _level_capacity(self, level: int) -> int:
+        return (self.cfg.T - 1) * self.cfg.T ** (level - 1) \
+            * self.cfg.buf_entries
+
+    # -- write path --------------------------------------------------------
+
+    def put(self, key: int, value: Any) -> None:
+        self.stats.queries["w"] += 1
+        self.buffer[key] = value
+        if len(self.buffer) >= self.cfg.buf_entries:
+            self.flush()
+
+    def delete(self, key: int) -> None:
+        self.put(key, TOMBSTONE)
+
+    def put_batch(self, keys, values: Sequence[Any]) -> None:
+        """Bulk insert in buffer-sized chunks; equivalent to sequential
+        :meth:`put` calls without the per-key Python overhead: same flush
+        boundaries (chunks are cut to the buffer's remaining room) and same
+        newest-wins semantics (insertion order is preserved, so later
+        duplicates overwrite earlier ones; :meth:`flush` sorts each run)."""
+        keys = np.asarray(keys, np.uint64)
+        i, n = 0, len(keys)
+        if len(values) != n:
+            raise ValueError(f"put_batch: {n} keys but {len(values)} values")
+        while i < n:
+            room = max(1, self.cfg.buf_entries - len(self.buffer))
+            chunk = keys[i:i + room]
+            self.buffer.update(zip(chunk.tolist(), values[i:i + room]))
+            self.stats.queries["w"] += len(chunk)
+            i += len(chunk)
+            if len(self.buffer) >= self.cfg.buf_entries:
+                self.flush()
+
+    def flush(self) -> None:
+        if not self.buffer:
+            return
+        keys = np.fromiter(self.buffer.keys(), np.uint64, len(self.buffer))
+        order = np.argsort(keys)
+        keys = keys[order]
+        vals = np.asarray(list(self.buffer.values()), dtype=object)[order]
+        run = SortedRun(keys, vals, self._bits_per_key(1),
+                        self.cfg.entries_per_page)
+        self.stats.comp_pages_written += run.num_pages  # sequential flush
+        self.buffer.clear()
+        self._push_run(1, run)
+
+    def _push_run(self, level: int, run: SortedRun) -> None:
+        lv = self.levels[level - 1]
+        cap = self._level_capacity(level)
+        K = self.cfg.k_at(level)
+        if lv.entries + len(run) > cap and lv.entries > 0:
+            # Full-level compaction: merge everything, move to level + 1.
+            # Tombstones may be dropped iff nothing lives deeper.
+            deepest = all(not l.runs for l in self.levels[level:])
+            merged = _merge_runs([run] + lv.runs, self._bits_per_key(level + 1),
+                                 self.cfg.entries_per_page, self.stats,
+                                 drop_tombstones=deepest)
+            lv.runs = []
+            self._push_run(level + 1, merged)
+            return
+        # Eager-merge semantics: fill the active (newest) run up to the
+        # per-run flush capacity ceil((T-1)/K) flushes, else open a new run.
+        flush_cap = max(1, math.ceil((self.cfg.T - 1) / K))
+        if lv.runs and lv.runs[0].flushes + run.flushes <= flush_cap:
+            merged = _merge_runs([run, lv.runs[0]], self._bits_per_key(level),
+                                 self.cfg.entries_per_page, self.stats)
+            lv.runs[0] = merged
+        else:
+            lv.runs.insert(0, run)
+        # Respect the K_i cap if logical moves overfilled the level.
+        while len(lv.runs) > K:
+            merged = _merge_runs(lv.runs[:2], self._bits_per_key(level),
+                                 self.cfg.entries_per_page, self.stats)
+            lv.runs = [merged] + lv.runs[2:]
+
+    # -- read path ----------------------------------------------------------
+
+    def get(self, key: int) -> Optional[Any]:
+        found, val, _ = self._get_impl(key)
+        return val if found else None
+
+    def _get_impl(self, key: int):
+        if key in self.buffer:
+            v = self.buffer[key]
+            return (v is not TOMBSTONE), (None if v is TOMBSTONE else v), True
+        for lv in self.levels:
+            for run in lv.runs:  # newest -> oldest
+                found, val = run.get(key, self.stats)
+                if found:
+                    if val is TOMBSTONE:
+                        return False, None, False
+                    return True, val, False
+        return False, None, False
+
+    def point_query(self, key: int) -> Optional[Any]:
+        """A classified point query (updates z0/z1 accounting)."""
+        found, val, _ = self._get_impl(key)
+        self.stats.queries["z1" if found else "z0"] += 1
+        return val
+
+    def point_query_batch(self, keys) -> List[Optional[Any]]:
+        """Classified point queries for a key batch, one vectorized Bloom
+        probe (``might_contain_batch``) + one ``searchsorted`` per run instead
+        of per-key Python loops.  Equivalent to ``[point_query(k) for k in
+        keys]``: same run visit order (newest -> oldest), same I/O and
+        bloom-probe accounting, same z0/z1 classification."""
+        keys_arr = np.asarray(keys, np.uint64)
+        n = len(keys_arr)
+        results: List[Optional[Any]] = [None] * n
+        resolved = np.zeros(n, bool)
+        found = np.zeros(n, bool)
+        for idx in range(n):
+            kk = int(keys_arr[idx])
+            if kk in self.buffer:
+                v = self.buffer[kk]
+                resolved[idx] = True
+                if v is not TOMBSTONE:
+                    found[idx] = True
+                    results[idx] = v
+        for lv in self.levels:
+            for run in lv.runs:  # newest -> oldest, as in _get_impl
+                active = np.nonzero(~resolved)[0]
+                if active.size == 0:
+                    break
+                sub = keys_arr[active]
+                self.stats.bloom_probes += int(active.size)
+                pos = run.bloom.might_contain_batch(sub)
+                if not pos.any():
+                    continue
+                probe_idx = active[pos]
+                pk = sub[pos]
+                self.stats.random_reads += int(pos.sum())
+                loc = np.searchsorted(run.keys, pk)
+                inb = loc < len(run.keys)
+                eq = np.zeros(len(pk), bool)
+                eq[inb] = run.keys[loc[inb]] == pk[inb]
+                self.stats.bloom_false_positives += int(len(pk) - eq.sum())
+                for gi, li in zip(probe_idx[eq], loc[eq]):
+                    v = run.values[li]
+                    resolved[gi] = True
+                    if v is not TOMBSTONE:
+                        found[gi] = True
+                        results[gi] = v
+            if not (~resolved).any():
+                break
+        nz1 = int(found.sum())
+        self.stats.queries["z1"] += nz1
+        self.stats.queries["z0"] += n - nz1
+        return results
+
+    def range_query(self, lo: int, hi: int) -> List[Tuple[int, Any]]:
+        self.stats.queries["q"] += 1
+        results: dict = {}
+        sources: List[List[Tuple[int, Any]]] = []
+        for lv in self.levels:
+            for run in lv.runs:
+                sources.append(run.scan(lo, hi, self.stats))
+        for src in reversed(sources):  # oldest first; newer overwrite
+            for k, v in src:
+                results[k] = v
+        for k in list(self.buffer.keys()):
+            if lo <= k < hi:
+                results[k] = self.buffer[k]
+        return sorted((k, v) for k, v in results.items()
+                      if v is not TOMBSTONE)
+
+    # -- introspection --------------------------------------------------------
+
+    @property
+    def num_entries(self) -> int:
+        return len(self.buffer) + sum(lv.entries for lv in self.levels)
+
+    def shape(self) -> List[Tuple[int, List[int]]]:
+        """[(level, [run sizes])] for non-empty levels."""
+        return [(i + 1, [len(r) for r in lv.runs])
+                for i, lv in enumerate(self.levels) if lv.runs]
+
+    def filter_bits_in_use(self) -> int:
+        return sum(r.bloom.bits_used for lv in self.levels for r in lv.runs)
+
+
+# ---------------------------------------------------------------------------
+# Frozen session runner (pre-refactor workload_runner.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SessionResult:
+    workload: np.ndarray
+    queries: int
+    avg_io_per_query: float
+    io: IOStats
+
+    @property
+    def throughput(self) -> float:
+        return 1.0 / max(self.avg_io_per_query, 1e-9)
+
+
+def populate(tree: LSMTree, n: int, seed: int = 7,
+             key_space: int = 2 ** 48) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(key_space, size=n, replace=False).astype(np.uint64)
+    values = (keys % np.uint64(997)).astype(np.int64).tolist()
+    tree.put_batch(keys, values)
+    tree.flush()
+    tree.stats = IOStats()
+    return keys
+
+
+def run_session(tree: LSMTree, existing_keys: np.ndarray, w: np.ndarray,
+                n_queries: int = 2000, seed: int = 0,
+                key_space: int = 2 ** 48,
+                range_fraction: float = 2e-5,
+                f_a: float = 1.0, f_seq: float = 1.0,
+                zipf_a=None) -> SessionResult:
+    rng = np.random.default_rng(seed)
+    w = np.asarray(w, np.float64)
+    w = w / w.sum()
+    kinds = rng.choice(4, size=n_queries, p=w)
+    before = tree.stats.snapshot()
+    span = max(1, int(range_fraction * key_space))
+    existing = np.asarray(existing_keys, np.uint64)
+    fresh = iter(rng.choice(key_space, size=max((kinds == 3).sum(), 1) + 8,
+                            replace=False).astype(np.uint64))
+    pending_reads: list = []
+    for kind in kinds:
+        if kind == 0:        # empty point read: perturb to near-certain miss
+            k = int(rng.integers(0, key_space)) | (1 << 60)
+            pending_reads.append(k)
+        elif kind == 1:      # non-empty point read
+            if zipf_a is not None:
+                idx = min(len(existing) - 1, rng.zipf(zipf_a) - 1)
+            else:
+                idx = int(rng.integers(0, len(existing)))
+            pending_reads.append(int(existing[idx]))
+        elif kind == 2:      # short range query
+            if pending_reads:
+                tree.point_query_batch(pending_reads)
+                pending_reads = []
+            lo = int(rng.integers(0, key_space - span))
+            tree.range_query(lo, lo + span)
+        else:                # write
+            if pending_reads:
+                tree.point_query_batch(pending_reads)
+                pending_reads = []
+            tree.put(int(next(fresh)), 1)
+    if pending_reads:
+        tree.point_query_batch(pending_reads)
+    delta = tree.stats.minus(before)
+    reads_io = delta.random_reads + f_seq * delta.seq_reads
+    write_io = f_seq * (delta.comp_pages_read + f_a * delta.comp_pages_written)
+    total_io = reads_io + write_io
+    avg = total_io / max(n_queries, 1)
+    return SessionResult(workload=w, queries=n_queries, avg_io_per_query=avg,
+                         io=delta)

@@ -1,0 +1,256 @@
+"""Golden-equivalence tests for the columnar LSM engine refactor.
+
+The store/planner/executor engine must reproduce the frozen pre-refactor
+engine (``tests/_legacy_engine.py``, a verbatim snapshot) EXACTLY: the same
+``IOStats`` (random/seq reads, compaction pages, bloom probes and false
+positives, z0/z1/q/w counts) on fixed-seed populate + session scenarios
+across leveling / tiering / mixed-K configs, the same tree shapes, the same
+values, the same filter-bit budgets.  Plus property tests for newest-wins
+and tombstone semantics under interleaved puts / deletes / range scans, and
+unit tests for the new layers (codec, Bloom pack, planner, batch paths).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import _legacy_engine as legacy
+from repro.lsm import (EngineConfig, LSMTree, draw_keys, populate, run_fleet,
+                       run_session)
+from repro.lsm.bloom import BloomFilter, BloomPack
+from repro.lsm.planner import KLSMPlanner, MergePlan
+from repro.lsm.store import TOMB, ValueCodec
+
+KEY_SPACE = 2 ** 24
+
+CONFIGS = {
+    "leveling": dict(T=4, K=(1,) * 8, buf_entries=128, expected_entries=6000,
+                     mfilt_bits_per_entry=8.0),
+    "tiering": dict(T=5, K=(4,) * 8, buf_entries=128, expected_entries=6000,
+                    mfilt_bits_per_entry=8.0),
+    "mixed_k": dict(T=4, K=(3, 1, 2), buf_entries=64, expected_entries=5000,
+                    mfilt_bits_per_entry=8.0),
+}
+
+SESSIONS = [
+    [0.25, 0.25, 0.25, 0.25],
+    [0.85, 0.05, 0.05, 0.05],
+    [0.05, 0.85, 0.05, 0.05],
+    [0.05, 0.05, 0.85, 0.05],
+    [0.05, 0.05, 0.05, 0.85],
+]
+
+
+def _pair(name):
+    kw = CONFIGS[name]
+    return LSMTree(EngineConfig(**kw)), legacy.LSMTree(legacy.EngineConfig(**kw))
+
+
+@pytest.mark.parametrize("config", sorted(CONFIGS))
+def test_golden_iostats_populate_and_sessions(config):
+    """New engine == frozen engine, stat for stat, on every session mix."""
+    n = CONFIGS[config]["expected_entries"]
+    new, old = _pair(config)
+    keys_new = populate(new, n, seed=11, key_space=KEY_SPACE)
+    keys_old = legacy.populate(old, n, seed=11, key_space=KEY_SPACE)
+    assert np.array_equal(keys_new, keys_old)
+    assert new.shape() == old.shape()
+    assert new.filter_bits_in_use() == old.filter_bits_in_use()
+    for i, w in enumerate(SESSIONS):
+        res_new = run_session(new, keys_new, np.asarray(w), n_queries=600,
+                              seed=50 + i, key_space=KEY_SPACE,
+                              range_fraction=1e-3)
+        res_old = legacy.run_session(old, keys_old, np.asarray(w),
+                                     n_queries=600, seed=50 + i,
+                                     key_space=KEY_SPACE,
+                                     range_fraction=1e-3)
+        assert dataclasses.asdict(res_new.io) == \
+            dataclasses.asdict(res_old.io), (config, i)
+        assert res_new.avg_io_per_query == res_old.avg_io_per_query
+    # sessions mutate the tree; shapes must still agree afterwards
+    assert new.shape() == old.shape()
+
+
+def test_golden_point_and_range_results_match():
+    """Query *results* (not just accounting) agree with the frozen engine."""
+    new, old = _pair("mixed_k")
+    n = CONFIGS["mixed_k"]["expected_entries"]
+    keys = populate(new, n, seed=3, key_space=KEY_SPACE)
+    legacy.populate(old, n, seed=3, key_space=KEY_SPACE)
+    rng = np.random.default_rng(0)
+    probe = np.concatenate([keys[::7],
+                            rng.integers(0, KEY_SPACE, 300).astype(np.uint64)])
+    assert new.point_query_batch(probe) == old.point_query_batch(probe)
+    for lo in rng.integers(0, KEY_SPACE - 40_000, 20):
+        assert new.range_query(int(lo), int(lo) + 40_000) == \
+            old.range_query(int(lo), int(lo) + 40_000)
+
+
+def test_run_fleet_matches_run_session():
+    """The fleet executor is exactly per-tree run_session, plans shared."""
+    cfgs = [CONFIGS["leveling"], CONFIGS["tiering"]]
+    keys = draw_keys(4000, seed=9, key_space=KEY_SPACE)
+    trees, singles = [], []
+    for kw in cfgs:
+        t_fleet = LSMTree(EngineConfig(**kw))
+        t_single = LSMTree(EngineConfig(**kw))
+        populate(t_fleet, 4000, key_space=KEY_SPACE, keys=keys)
+        populate(t_single, 4000, key_space=KEY_SPACE, keys=keys)
+        trees.append(t_fleet)
+        singles.append(t_single)
+    sessions = np.asarray(SESSIONS[:3])
+    seeds = np.asarray([7, 8, 9])
+    fleet = run_fleet(trees, sessions, keys, n_queries=400, seeds=seeds,
+                      key_space=KEY_SPACE, range_fraction=1e-3)
+    for tree, row in zip(singles, fleet):
+        for s, res in enumerate(row):
+            ref = run_session(tree, keys, sessions[s], n_queries=400,
+                              seed=int(seeds[s]), key_space=KEY_SPACE,
+                              range_fraction=1e-3)
+            assert dataclasses.asdict(res.io) == dataclasses.asdict(ref.io)
+
+
+# ---------------------------------------------------------------------------
+# Newest-wins / tombstone property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 1000), T=st.integers(2, 6),
+       kcap=st.integers(1, 5))
+def test_interleaved_puts_deletes_scans_property(seed, T, kcap):
+    """Under interleaved puts / overwrites / deletes / range scans the
+    engine must agree with a dict model: newest version wins, deleted keys
+    stay dead (range scans exercise compaction state mid-stream)."""
+    tree = LSMTree(EngineConfig(T=T, K=(min(kcap, T - 1),) * 8,
+                                buf_entries=32, expected_entries=2000))
+    rng = np.random.default_rng(seed)
+    universe = rng.choice(100_000, size=400, replace=False)
+    model = {}
+    for step in range(1200):
+        op = rng.integers(0, 10)
+        k = int(universe[rng.integers(0, len(universe))])
+        if op < 6:                       # put (sometimes an overwrite)
+            v = int(rng.integers(0, 10_000))
+            tree.put(k, v)
+            model[k] = v
+        elif op < 8:                     # delete (sometimes nonexistent)
+            tree.delete(k)
+            model.pop(k, None)
+        else:                            # range scan vs the model
+            lo = int(rng.integers(0, 90_000))
+            hi = lo + int(rng.integers(1, 20_000))
+            got = tree.range_query(lo, hi)
+            expect = sorted((kk, vv) for kk, vv in model.items()
+                            if lo <= kk < hi)
+            assert got == expect
+    for k in universe[:100]:
+        assert tree.get(int(k)) == model.get(int(k))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_tombstones_never_resurface_after_compaction(seed):
+    """Deleting a key buried in deep levels must survive any amount of
+    subsequent compaction (tombstones only dropped at the deepest level)."""
+    tree = LSMTree(EngineConfig(T=3, K=(2,) * 8, buf_entries=16,
+                                expected_entries=1000))
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(50_000, size=600, replace=False)
+    for k in keys:
+        tree.put(int(k), int(k))
+    dead = keys[::3]
+    for k in dead:
+        tree.delete(int(k))
+    # churn: force multi-level compaction waves over the tombstones
+    for k in rng.choice(50_000, size=600, replace=False):
+        tree.put(int(k) + 1_000_000, 0)
+    for k in dead[:80]:
+        assert tree.get(int(k)) is None
+    alive = [int(k) for k in keys if k not in set(dead.tolist())]
+    for k in alive[:80]:
+        assert tree.get(k) == k
+
+
+# ---------------------------------------------------------------------------
+# Layer unit tests: codec, Bloom pack, planner
+# ---------------------------------------------------------------------------
+
+def test_value_codec_roundtrip_and_interning():
+    c = ValueCodec()
+    ints = [0, 1, -1, 7, -2 ** 61, 2 ** 61]
+    for v in ints:
+        assert c.decode(c.encode(v)) == v
+    objs = ["json", (1, 2), None, True, 2 ** 63]   # non-int / out of range
+    encs = [c.encode(v) for v in objs]
+    assert all(e % 2 == 0 for e in encs), "objects must intern to even slots"
+    assert [c.decode(e) for e in encs] == objs
+    assert c.decode(encs[3]) is True               # bool identity preserved
+    enc_many = c.encode_many(np.arange(-5, 5))
+    assert c.decode_many(enc_many) == list(range(-5, 5))
+    assert TOMB not in enc_many.tolist()
+
+
+def test_bloom_pack_matches_per_run_filters():
+    rng = np.random.default_rng(1)
+    runs = [rng.choice(2 ** 48, size=n, replace=False).astype(np.uint64)
+            for n in (500, 1200, 64)]
+    filters = [BloomFilter(k, bits_per_key=b)
+               for k, b in zip(runs, (9.0, 5.0, 12.0))]
+    pack = BloomPack([f.words for f in filters],
+                     [f.n_bits for f in filters], [f.k for f in filters])
+    probe = np.concatenate([runs[0][:50], runs[1][:50],
+                            rng.integers(0, 2 ** 48, 400).astype(np.uint64)])
+    got = pack.probe(probe)
+    for r, f in enumerate(filters):
+        assert np.array_equal(got[r], f.might_contain_batch(probe)), r
+
+
+def test_planner_emits_klsm_plans_as_data():
+    cfg = EngineConfig(T=4, K=(2,) * 4, buf_entries=100,
+                       expected_entries=4000)
+    planner = KLSMPlanner(cfg)
+    entries = np.array([250, 0, 0])
+    runs = np.array([2, 0, 0])
+    flushes = np.array([1, 0, 0])
+    # level 1 capacity = 3 * 100: an incoming 100-entry run overflows -> spill
+    plan = planner.plan_push((entries, runs, flushes), 1, 100, 1)
+    assert plan == MergePlan(kind="spill", level=1, run_ids=(0, 1),
+                             target_level=2, drop_tombstones=True)
+    # with a populated deeper level the spill must keep tombstones
+    plan = planner.plan_push((entries, np.array([2, 1, 0]), flushes), 1,
+                             100, 1)
+    assert plan.drop_tombstones is False
+    # under capacity: eager-merge while the active run's lineage fits
+    plan = planner.plan_push((np.array([100, 0, 0]), np.array([1, 0, 0]),
+                              np.array([1, 0, 0])), 1, 100, 1)
+    assert plan.kind == "eager" and plan.target_level == 1
+    # lineage exhausted -> logical move, then clamps restore the K cap
+    plan = planner.plan_push((np.array([200, 0, 0]), np.array([1, 0, 0]),
+                              np.array([2, 0, 0])), 1, 50, 1)
+    assert plan.kind == "move"
+    clamps = planner.plan_clamps((entries, np.array([4, 0, 0]), flushes), 1)
+    assert [p.kind for p in clamps] == ["clamp", "clamp"]
+    assert all(p.run_ids == (0, 1) for p in clamps)
+
+
+def test_range_query_batch_matches_single_queries():
+    tree = LSMTree(EngineConfig(T=4, K=(2,) * 8, buf_entries=64,
+                                expected_entries=3000))
+    keys = populate(tree, 3000, seed=5, key_space=KEY_SPACE)
+    tree.put(int(keys[0]), "overwrite")      # buffered newest version
+    tree.delete(int(keys[1]))
+    rng = np.random.default_rng(2)
+    los = rng.integers(0, KEY_SPACE - 50_000, 40).astype(np.uint64)
+    his = los + np.uint64(50_000)
+    from repro.lsm.engine import IOStats
+    tree.stats = IOStats()
+    batch = tree.range_query_batch(los, his, return_results=True)
+    batch_stats = dataclasses.asdict(tree.stats.snapshot())
+    tree.stats = IOStats()
+    singles = [tree.range_query(int(lo), int(hi))
+               for lo, hi in zip(los, his)]
+    assert batch == singles
+    assert batch_stats == dataclasses.asdict(tree.stats)
