@@ -1,0 +1,165 @@
+"""Compaction design-space evaluation: measured vs model, per policy.
+
+Deploys ONE tuning under every compaction policy in the planner registry
+(K-LSM baseline + lazy leveling + partial compaction + tombstone-TTL),
+populates each tree from a shared 250k-key draw, seeds real tombstones
+(1% deletes, so the TTL sweeps have something to age out), and runs the
+same four drifted 10k-query sessions against every tree as ONE
+``run_fleet`` grid — the Section 9 experiment design extended along the
+Sarkar-taxonomy policy axis.
+
+Per policy the suite reports measured avg I/O per query per session next
+to the cost model's prediction through
+:func:`repro.core.policy_effective_phi` (the policy's steady-state K
+profile), plus the policy-specific invariants: the lazy tree's last-level
+run count (read pressure keeps it squeezed), the TTL tree's maximum
+surviving tombstone age, and the partial tree's bounded per-trigger merge
+size.
+
+Claims validated:
+  * the model's predicted ORDERING of policies by cost matches the
+    engine's measured ordering on most distinguishable (policy, policy,
+    session) pairs (the design-space analogue of 'model matches system');
+  * lazy leveling cuts write I/O vs leveling while read-triggered
+    squeezes keep point reads close to leveled cost;
+  * tombstone-TTL bounds delete persistence (max tombstone age <= TTL)
+    at a measurable write-amplification premium on write-heavy sessions.
+
+Known, expected discrepancy: the lazy-leveling prediction assumes the
+full tiering steady state (K_i = T-1 runs on every upper level), but the
+measured tree runs *below* that — read-triggered squeezes plus fence
+pointers that skip non-overlapping runs (the paper's own Figure 12
+range-query discrepancy) make measured cost ~2x lower than predicted.
+The agreement_ratio column reports this honestly rather than fitting
+the model to the engine.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import LSMSystem, cost_vector, make_phi, policy_effective_phi
+from repro.lsm import IOStats, LSMTree, draw_keys, populate, run_fleet
+from .common import Row
+
+N_KEYS = 250_000
+QUERIES = 10_000
+KEY_SPACE = 2 ** 26    # dense keyspace so ranges overlap runs
+RANGE_FRACTION = 1e-3  # of the keyspace == expected fraction of N per range,
+                       # so the model system below uses s_rq = RANGE_FRACTION
+BITS_PER_ENTRY = 6.0   # memory-constrained: deeper trees at small N
+DELETE_FRACTION = 0.01
+TTL_FLUSHES = 8        # short enough that sweeps fire inside the sessions
+T, FILT_BPE = 6, 4.0   # one mid-range leveled tuning, shared by all policies
+
+POLICY_PARAMS = {
+    "klsm": (),
+    "lazy_leveling": (("read_trigger", 512),),
+    "partial": (("parts", 4),),
+    "tombstone_ttl": (("ttl_flushes", TTL_FLUSHES),),
+}
+# drifted sessions: dominant query type >= 80% (paper Section 9.2)
+SESSIONS = np.array([
+    [0.85, 0.05, 0.05, 0.05],
+    [0.05, 0.85, 0.05, 0.05],
+    [0.05, 0.05, 0.85, 0.05],
+    [0.05, 0.05, 0.05, 0.85],
+])
+
+
+def run() -> List[Row]:
+    policies = list(POLICY_PARAMS)
+    sys_small = LSMSystem(N=float(N_KEYS), entry_bits=64 * 8,
+                          page_bits=4096 * 8, bits_per_entry=BITS_PER_ENTRY,
+                          min_buf_bits=64 * 8 * 64, s_rq=RANGE_FRACTION,
+                          max_T=30)
+    phi = make_phi(T, FILT_BPE * N_KEYS, 1.0, sys_small)
+
+    t0 = time.time()
+    keys = draw_keys(N_KEYS, seed=77, key_space=KEY_SPACE)
+    dead = keys[:: int(1 / DELETE_FRACTION)]
+    trees = []
+    for pol in policies:
+        tree = LSMTree.from_phi(phi, sys_small, expected_entries=N_KEYS,
+                                entry_bytes=64, policy=pol,
+                                policy_params=POLICY_PARAMS[pol])
+        populate(tree, N_KEYS, key_space=KEY_SPACE, keys=keys)
+        for k in dead:                    # seed tombstones for TTL sweeps
+            tree.delete(int(k))
+        tree.flush()
+        tree.stats = IOStats()            # deletes are setup, not workload
+        trees.append(tree)
+    populate_s = time.time() - t0
+
+    t0 = time.time()
+    fleet = run_fleet(trees, SESSIONS, keys, n_queries=QUERIES,
+                      seeds=np.arange(200, 200 + len(SESSIONS)),
+                      key_space=KEY_SPACE, range_fraction=RANGE_FRACTION)
+    fleet_s = time.time() - t0
+
+    rows: List[Row] = []
+    measured_by_policy, model_by_policy = {}, {}
+    for j, pol in enumerate(policies):
+        tree = trees[j]
+        eff = policy_effective_phi(phi, sys_small, pol)
+        c = np.asarray(cost_vector(eff, sys_small), np.float64)
+        model = SESSIONS @ c
+        measured = np.array([r.avg_io_per_query for r in fleet[j]])
+        measured_by_policy[pol] = measured
+        model_by_policy[pol] = model
+        shape = tree.shape()
+        last_runs = len(shape[-1][1]) if shape else 0
+        max_tomb_age = max(
+            (tree.flush_seq - ts for lv in tree.store.levels
+             for ts in lv.tomb_seqs if ts >= 0), default=0)
+        rows.append(Row(
+            f"compaction_{pol}", 0.0,
+            measured_io=[round(float(x), 3) for x in measured],
+            model_io=[round(float(x), 3) for x in model],
+            agreement_ratio=round(float(measured.mean() / model.mean()), 3),
+            last_level_runs=last_runs,
+            max_tombstone_age_flushes=int(max_tomb_age),
+            dead_keys_resurfaced=sum(
+                tree.get(int(k)) is not None for k in dead[:200]),
+        ))
+
+    # model-vs-system ranking agreement, pairwise per drifted session: only
+    # pairs the model actually distinguishes (>2% predicted gap) count —
+    # klsm/partial/tombstone_ttl share a steady-state profile, so the model
+    # deliberately predicts ties for them
+    agree = total = 0
+    for s in range(len(SESSIONS)):
+        for a in range(len(policies)):
+            for b in range(a + 1, len(policies)):
+                dm = model_by_policy[policies[a]][s] \
+                    - model_by_policy[policies[b]][s]
+                if abs(dm) < 0.02 * model_by_policy[policies[a]][s]:
+                    continue
+                de = measured_by_policy[policies[a]][s] \
+                    - measured_by_policy[policies[b]][s]
+                total += 1
+                agree += (dm > 0) == (de > 0)
+    lazy_w = float(measured_by_policy["lazy_leveling"][3])
+    klsm_w = float(measured_by_policy["klsm"][3])
+    ttl_tree = trees[policies.index("tombstone_ttl")]
+    rows.append(Row(
+        "compaction_summary", 0.0,
+        policies=len(policies),
+        pairwise_rank_agreement=f"{agree}/{total}",
+        lazy_beats_leveling_on_writes=lazy_w < klsm_w,
+        ttl_bound_holds=all(
+            ttl_tree.flush_seq - ts < TTL_FLUSHES
+            for lv in ttl_tree.store.levels
+            for ts in lv.tomb_seqs if ts >= 0),
+    ))
+    rows.append(Row(
+        "compaction_fleet", (populate_s + fleet_s) * 1e6,
+        n_keys=N_KEYS, n_queries=QUERIES, trees=len(trees),
+        sessions_per_tree=len(SESSIONS),
+        populate_s=round(populate_s, 2),
+        engine_s=round(populate_s + fleet_s, 2),
+    ))
+    return rows

@@ -16,7 +16,14 @@ trajectory against the committed ``BENCH_<suite>.json`` baselines
 (``--baseline DIR``, default the repo root): per-suite wall time plus the
 curated directional metrics in ``CHECK_METRICS`` must stay within
 ``--tolerance`` (default 1.5x slack for machine noise) of the baseline.
-Exits nonzero on any regression — the CI perf gate.
+Exit codes are distinct so CI can tell the failure modes apart: 1 for a
+perf regression (or a crashed suite), 2 for a *misconfigured* gate — a
+checked suite with no committed baseline (a new suite must commit its
+``BENCH_<suite>.json`` before the gate can watch it) or a filter that
+selects no suite at all (a typo would otherwise pass vacuously).
+
+``--list`` prints the suite names one per line (for CI job matrices) and
+exits.
 """
 
 import argparse
@@ -36,7 +43,32 @@ CHECK_METRICS = {
     "tab5": {
         "tab5_fleet.engine_s": "lower",
     },
+    "compaction": {
+        "compaction_fleet.engine_s": "lower",
+    },
 }
+
+#: --check exit codes: regression vs misconfiguration (missing baseline /
+#: filters matching nothing) — CI treats both as failures but reports them
+#: differently.
+EXIT_REGRESSION = 1
+EXIT_MISCONFIGURED = 2
+
+#: suite key -> module name, kept static so ``--list`` (and filter
+#: validation) need no jax import; modules are imported only when run.
+SUITE_MODULES = [
+    ("fig4", "bench_nominal_designs"),
+    ("fig6", "bench_robust_vs_nominal"),
+    ("fig7_8", "bench_rho_impact"),
+    ("fig9", "bench_rho_choice"),
+    ("fig10", "bench_entry_size"),
+    ("tab5", "bench_system_eval"),
+    ("fig19", "bench_flexible_robustness"),
+    ("tuner", "bench_tuner_perf"),
+    ("roofline", "bench_roofline"),
+    ("robust_sharding", "bench_robust_sharding"),
+    ("compaction", "bench_compaction_space"),
+]
 
 
 def _load_baselines(suites, baseline_dir):
@@ -55,9 +87,9 @@ def _load_baselines(suites, baseline_dir):
 def _check_suite(key, rows, wall, base, tol):
     """Compare one executed suite against its committed baseline.
 
-    Returns a list of human-readable regression strings (empty = pass)."""
-    if base is None:
-        return [f"{key}: no baseline BENCH_{key}.json"]
+    Returns a list of human-readable regression strings (empty = pass).
+    A missing baseline is NOT a regression — the caller reports it
+    separately and exits with EXIT_MISCONFIGURED."""
     regressions = []
 
     def compare(label, measured, reference, direction, slack=1.0):
@@ -123,7 +155,10 @@ def main() -> None:
                         help="directory to write per-suite BENCH_<suite>.json")
     parser.add_argument("--check", action="store_true",
                         help="diff measured perf against committed baselines; "
-                             "exit nonzero on regression")
+                             "exit 1 on regression, 2 on a missing baseline "
+                             "or a filter matching no suite")
+    parser.add_argument("--list", action="store_true",
+                        help="print the available suite names and exit")
     parser.add_argument("--baseline", metavar="DIR",
                         default=os.path.join(os.path.dirname(__file__), ".."),
                         help="baseline directory for --check "
@@ -133,31 +168,28 @@ def main() -> None:
                              "(default 1.5x)")
     args = parser.parse_args()
 
-    from . import (bench_entry_size, bench_flexible_robustness,
-                   bench_nominal_designs, bench_rho_choice, bench_rho_impact,
-                   bench_robust_sharding, bench_robust_vs_nominal,
-                   bench_roofline, bench_system_eval, bench_tuner_perf)
-    suites = [
-        ("fig4", bench_nominal_designs),
-        ("fig6", bench_robust_vs_nominal),
-        ("fig7_8", bench_rho_impact),
-        ("fig9", bench_rho_choice),
-        ("fig10", bench_entry_size),
-        ("tab5", bench_system_eval),
-        ("fig19", bench_flexible_robustness),
-        ("tuner", bench_tuner_perf),
-        ("roofline", bench_roofline),
-        ("robust_sharding", bench_robust_sharding),
-    ]
+    if args.list:
+        for key, _ in SUITE_MODULES:
+            print(key)
+        return
+    selected_names = [(key, name) for key, name in SUITE_MODULES
+                      if not args.filters or any(f in key for f in
+                                                 args.filters)]
+    if not selected_names:
+        print(f"error: filters {args.filters} match no suite; "
+              "run --list to see suite names")
+        raise SystemExit(EXIT_MISCONFIGURED)
+    import importlib
+    selected = [(key, importlib.import_module(f".{name}", __package__))
+                for key, name in selected_names]
     if args.json:
         os.makedirs(args.json, exist_ok=True)
-    baselines = _load_baselines(suites, args.baseline) if args.check else {}
+    baselines = _load_baselines(selected, args.baseline) if args.check else {}
     print("name,us_per_call,derived")
     failures = 0
     all_regressions = []
-    for key, mod in suites:
-        if args.filters and not any(f in key for f in args.filters):
-            continue
+    missing_baselines = []
+    for key, mod in selected:
         t0 = time.time()
         rows, error = [], None
         try:
@@ -186,12 +218,20 @@ def main() -> None:
                           allow_nan=False)
             print(f"# wrote {path}", flush=True)
         if args.check and error is None:
-            all_regressions += _check_suite(key, rows, wall,
-                                            baselines.get(key),
-                                            args.tolerance)
+            base = baselines.get(key)
+            if base is None:
+                missing_baselines.append(key)
+            else:
+                all_regressions += _check_suite(key, rows, wall, base,
+                                                args.tolerance)
     if failures:
         raise SystemExit(f"{failures} benchmark suites failed")
     if args.check:
+        if missing_baselines:
+            print("error: no committed baseline for: "
+                  + ", ".join(f"BENCH_{k}.json" for k in missing_baselines)
+                  + " (generate with --json and commit before gating)")
+            raise SystemExit(EXIT_MISCONFIGURED)
         if all_regressions:
             raise SystemExit("perf regressions vs committed baselines:\n  "
                              + "\n  ".join(all_regressions))

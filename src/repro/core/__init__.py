@@ -13,7 +13,8 @@
 """
 
 from .batch import tune_nominal_many, tune_robust_many
-from .designs import DesignSpace, describe, to_phi, to_phi_policy
+from .designs import (ENGINE_POLICIES, DesignSpace, describe,
+                      policy_effective_phi, to_phi, to_phi_policy)
 from .lsm_cost import (LSMSystem, Phi, cost_vector, expected_cost,
                        leveling_phi, make_phi, num_levels, throughput,
                        tiering_phi)
@@ -30,7 +31,7 @@ __all__ = [
     "DesignSpace", "LSMSystem", "Phi", "TuningResult",
     "cost_vector", "expected_cost", "throughput", "num_levels",
     "make_phi", "leveling_phi", "tiering_phi", "describe", "to_phi",
-    "to_phi_policy",
+    "to_phi_policy", "ENGINE_POLICIES", "policy_effective_phi",
     "tune_nominal", "tune_nominal_slsqp", "tune_robust", "tune_robust_slsqp",
     "tune_nominal_many", "tune_robust_many",
     "robust_cost", "dual_solve_cold", "dual_solve_warm",

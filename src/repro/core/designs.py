@@ -129,6 +129,38 @@ def to_phi_policy(theta: jnp.ndarray, policy: jnp.ndarray, sys: LSMSystem,
     return Phi(T=T, mfilt_bits=mfilt, K=K)
 
 
+#: engine-side compaction policies (repro.lsm.planner.POLICIES) the cost
+#: model knows how to predict for — the policy axis of Table-5-style sweeps.
+ENGINE_POLICIES = ("klsm", "lazy_leveling", "partial", "tombstone_ttl")
+
+
+def policy_effective_phi(phi: Phi, sys: LSMSystem, policy: str) -> Phi:
+    """The Phi whose cost vector predicts ``phi`` deployed under an engine
+    compaction policy.
+
+    The cost model speaks only run-cap profiles (K_i), so each policy maps
+    to the profile its steady state exhibits:
+
+    * ``klsm`` / ``tombstone_ttl`` — the tuning's own K profile (TTL sweeps
+      change *when* deletes are purged, not the steady-state shape);
+    * ``lazy_leveling`` — tiering caps above, a single run at the last
+      level (read pressure keeps the bottom squeezed): ``K_i = T-1`` for
+      ``i < L``, ``K_L = 1``;
+    * ``partial`` — the tuning's own K profile (slice-at-a-time granularity
+      changes per-trigger latency, not amortized totals: every entry still
+      crosses every level once per level of depth).
+    """
+    if policy not in ENGINE_POLICIES:
+        raise ValueError(f"unknown engine policy {policy!r}; "
+                         f"known: {ENGINE_POLICIES}")
+    if policy != "lazy_leveling":
+        return phi
+    idx = jnp.arange(1, sys.max_levels + 1, dtype=phi.K.dtype)
+    L = num_levels(phi.T, mbuf_bits(phi, sys), sys, smooth=False)
+    K = jnp.where(idx == L, 1.0, jnp.maximum(phi.T - 1.0, 1.0))
+    return Phi(T=phi.T, mfilt_bits=phi.mfilt_bits, K=K)
+
+
 def describe(phi: Phi, sys: LSMSystem) -> str:
     """Human-readable tuning summary: (T, m_filt bits/entry, K-profile)."""
     import numpy as np

@@ -7,15 +7,21 @@ engine + session executor (:mod:`repro.lsm.engine`,
 
 from .bloom import BloomFilter, BloomPack, monkey_bits_per_key
 from .engine import EngineConfig, IOStats, LSMTree, TOMBSTONE
-from .planner import KLSMPlanner, MergePlan
+from .planner import (POLICIES, CompactionPolicy, KLSMPlanner,
+                      LazyLevelingPlanner, MergePlan,
+                      PartialCompactionPlanner, TombstoneTTLPlanner,
+                      make_planner)
 from .store import RunStore, ValueCodec
 from .workload_runner import (SessionPlan, SessionResult, draw_keys,
                               execute_session, materialize_session,
                               measured_cost_vector, populate, run_fleet,
-                              run_session)
+                              run_policy_fleet, run_session)
 
 __all__ = ["BloomFilter", "BloomPack", "monkey_bits_per_key", "EngineConfig",
-           "IOStats", "LSMTree", "TOMBSTONE", "KLSMPlanner", "MergePlan",
+           "IOStats", "LSMTree", "TOMBSTONE", "CompactionPolicy",
+           "KLSMPlanner", "LazyLevelingPlanner", "PartialCompactionPlanner",
+           "TombstoneTTLPlanner", "POLICIES", "make_planner", "MergePlan",
            "RunStore", "ValueCodec", "SessionPlan", "SessionResult",
            "draw_keys", "execute_session", "materialize_session",
-           "measured_cost_vector", "populate", "run_fleet", "run_session"]
+           "measured_cost_vector", "populate", "run_fleet",
+           "run_policy_fleet", "run_session"]

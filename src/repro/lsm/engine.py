@@ -15,12 +15,15 @@ Architecture: three explicit layers
   (:class:`repro.lsm.bloom.BloomPack`).  Values are int64-encoded (inline
   ints / interned objects / an integer tombstone sentinel), so merges and
   tombstone drops are pure vector ops.
-* **Policy** (:mod:`repro.lsm.planner`) — a compaction planner that reads
-  level-occupancy arrays and emits :class:`repro.lsm.planner.MergePlan`
-  values (which runs -> which level, drop-tombstones flag) as plain data.
-  The K-LSM policy below is the only planner today; alternative triggers
-  from the compaction design-space taxonomy are new planners, not engine
-  changes.
+* **Policy** (:mod:`repro.lsm.planner`) — pluggable compaction planners
+  that read level-occupancy arrays and fence/tombstone metadata and emit
+  :class:`repro.lsm.planner.MergePlan` values (which runs -> which level,
+  optional key-range slice, drop-tombstones flag) as plain data.
+  ``EngineConfig.policy`` selects from the design-space registry: the
+  paper's K-LSM triggers (default), lazy leveling (read-pressure last-level
+  squeeze), partial/partitioned compaction (key-range slices per trigger),
+  or tombstone-TTL sweeps (bounded delete persistence) — see
+  ``docs/compaction.md`` for the taxonomy mapping.
 * **Execution** — this module's :class:`LSMTree` drives the
   plan-execute-replan loop on the write path and owns the batched read
   paths: ``point_query_batch`` probes a key batch against every run of a
@@ -57,7 +60,7 @@ from typing import Any, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .bloom import monkey_bits_per_key
-from .planner import KLSMPlanner
+from .planner import make_planner
 from .store import TOMB, RunData, RunStore, pages_of
 
 TOMBSTONE = object()
@@ -112,6 +115,11 @@ class EngineConfig:
     page_bytes: int = 4096
     mfilt_bits_per_entry: float = 10.0  # Monkey budget, bits per *total* entry
     expected_entries: int = 200_000     # N used for Monkey allocation + L
+    #: compaction policy name (see repro.lsm.planner.POLICIES) + its
+    #: constructor params as (name, value) pairs (kept a tuple so the
+    #: config stays hashable)
+    policy: str = "klsm"
+    policy_params: Tuple[Tuple[str, Any], ...] = ()
 
     @property
     def entries_per_page(self) -> int:
@@ -140,15 +148,18 @@ class LSMTree:
         self.cfg = config
         self.buffer: dict = {}           # int key -> int64-encoded value
         self.store = RunStore(config.entries_per_page)
-        self.planner = KLSMPlanner(config)
+        self.planner = make_planner(config)
         self.stats = IOStats()
+        self.flush_seq = 0               # logical clock: flushes so far
 
     # -- construction from a tuning -------------------------------------
 
     @classmethod
     def from_phi(cls, phi, sys, expected_entries: int,
                  buf_entries: Optional[int] = None,
-                 entry_bytes: int = 64, page_bytes: int = 4096) -> "LSMTree":
+                 entry_bytes: int = 64, page_bytes: int = 4096,
+                 policy: str = "klsm",
+                 policy_params: Tuple[Tuple[str, Any], ...] = ()) -> "LSMTree":
         """Deploy a tuner-recommended Phi at reduced scale.
 
         The *shape* of the tuning (T, K profile, filter bits/entry) carries
@@ -171,7 +182,8 @@ class LSMTree:
         cfg = EngineConfig(T=T, K=K, buf_entries=buf_entries,
                            entry_bytes=entry_bytes, page_bytes=page_bytes,
                            mfilt_bits_per_entry=filt_bpe,
-                           expected_entries=expected_entries)
+                           expected_entries=expected_entries,
+                           policy=policy, policy_params=tuple(policy_params))
         return cls(cfg)
 
     # -- bits allocation --------------------------------------------------
@@ -230,12 +242,15 @@ class LSMTree:
         keys = np.fromiter(self.buffer.keys(), np.uint64, len(self.buffer))
         vals = np.fromiter(self.buffer.values(), np.int64, len(self.buffer))
         order = np.argsort(keys)
+        self.flush_seq += 1
+        tomb_seq = self.flush_seq if bool((vals == TOMB).any()) else -1
         run = RunData.build(keys[order], vals[order], self._bits_per_key(1),
-                            flushes=1)
+                            flushes=1, tomb_seq=tomb_seq)
         self.stats.comp_pages_written += pages_of(
             len(run), self.cfg.entries_per_page)   # sequential flush
         self.buffer.clear()
         self._push_run(1, run)
+        self._maintain()
 
     def _push_run(self, level: int, run: RunData) -> None:
         """Plan-execute-replan until the incoming run finds a home."""
@@ -253,6 +268,37 @@ class LSMTree:
                     self.store.occupancy(min_levels=level), level):
                 self.store.execute(clamp, None, self.stats, bpk)
             return
+
+    def _maintain(self) -> None:
+        """Poll the planner's maintenance hook until it is satisfied.
+
+        Read-pressure squeezes (lazy leveling), over-capacity partial
+        spills, and tombstone-TTL sweeps all arrive through here as the
+        same :class:`~repro.lsm.planner.MergePlan` vocabulary the write
+        path executes.  Spill-kind plans re-enter :meth:`_push_run` at
+        their target level, so a maintenance merge cascades through the
+        same plan-execute-replan loop an overflowing flush would.  The
+        K-LSM planner has no maintenance; this is a no-op for it."""
+        if not self.planner.has_maintenance:
+            return
+        for _ in range(100_000):
+            plans = self.planner.plan_maintenance(self.store, self.stats,
+                                                  self.flush_seq)
+            if not plans:
+                return
+            for plan in plans:
+                # merge outputs live at target_level, so they take ITS
+                # Monkey bits budget (only in-level plans stay at level)
+                bpk = self._bits_per_key(plan.target_level)
+                if plan.kind == "spill":
+                    out = self.store.execute(plan, None, self.stats, bpk)
+                    if len(out):
+                        self._push_run(plan.target_level, out)
+                else:
+                    self.store.execute(plan, None, self.stats, bpk)
+        raise RuntimeError(
+            f"{type(self.planner).__name__}.plan_maintenance did not "
+            "converge within 100000 rounds")
 
     # -- read path ----------------------------------------------------------
 
@@ -356,7 +402,9 @@ class LSMTree:
         """A classified point query (updates z0/z1 accounting)."""
         found, enc = self._lookup_batch(np.asarray([key], np.uint64))
         self.stats.queries["z1" if found[0] else "z0"] += 1
-        return self.store.codec.decode(enc[0]) if found[0] else None
+        out = self.store.codec.decode(enc[0]) if found[0] else None
+        self._maintain()     # read-triggered policies (lazy leveling)
+        return out
 
     def point_query_batch(self, keys) -> List[Optional[Any]]:
         """Classified point queries for a key batch; equivalent to
@@ -385,6 +433,7 @@ class LSMTree:
         nz1 = int(found.sum())
         self.stats.queries["z1"] += nz1
         self.stats.queries["z0"] += len(keys_arr) - nz1
+        self._maintain()     # read-triggered policies fire at batch ends
         return found, enc
 
     def range_query(self, lo: int, hi: int) -> List[Tuple[int, Any]]:
@@ -432,6 +481,7 @@ class LSMTree:
                         pieces.append((qid, rkeys[idx], rvals[idx],
                                        np.full(len(idx), recency, np.int64)))
                 recency += 1
+        self._maintain()     # range seeks count as read pressure too
         if not return_results:
             return None
         if self.buffer:                     # newest of all: recency -1

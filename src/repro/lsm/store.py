@@ -108,7 +108,12 @@ class RunData:
     The Bloom *parameters* (n_bits, k) are fixed at build time — they are
     what the I/O accounting observes — but the filter words materialize
     lazily on first probe: a run merged away before any read never pays the
-    k x n hashing cost (the write path never probes)."""
+    k x n hashing cost (the write path never probes).
+
+    ``tomb_seq`` is the logical flush-sequence of the *oldest* tombstone in
+    the run (-1 when tombstone-free): the metadata the tombstone-TTL planner
+    triggers on.  Merges propagate the minimum over inputs whose tombstones
+    survive into the output."""
 
     keys: np.ndarray          # uint64, sorted ascending, unique
     vals: np.ndarray          # int64, encoded
@@ -116,14 +121,15 @@ class RunData:
     n_bits: int
     k: int
     words: Optional[np.ndarray] = None   # uint64 filter words, lazy
+    tomb_seq: int = -1        # flush seq of oldest tombstone; -1 = none
 
     @classmethod
     def build(cls, keys: np.ndarray, vals: np.ndarray, bits_per_key: float,
-              flushes: int) -> "RunData":
+              flushes: int, tomb_seq: int = -1) -> "RunData":
         keys = np.asarray(keys, np.uint64)
         n_bits, k = bloom_params(len(keys), bits_per_key)
         return cls(keys=keys, vals=np.asarray(vals, np.int64),
-                   flushes=flushes, n_bits=n_bits, k=k)
+                   flushes=flushes, n_bits=n_bits, k=k, tomb_seq=tomb_seq)
 
     def __len__(self) -> int:
         return len(self.keys)
@@ -133,7 +139,7 @@ class LevelStore:
     """All runs of one level as SoA arenas + packed filter metadata."""
 
     __slots__ = ("keys", "vals", "starts", "flushes", "n_bits", "ks",
-                 "words_list", "min_keys", "max_keys", "_pack")
+                 "words_list", "min_keys", "max_keys", "tomb_seqs", "_pack")
 
     def __init__(self):
         self.keys = np.empty(0, np.uint64)
@@ -145,6 +151,7 @@ class LevelStore:
         self.words_list: List[np.ndarray] = []
         self.min_keys = np.empty(0, np.uint64)
         self.max_keys = np.empty(0, np.uint64)
+        self.tomb_seqs: List[int] = []
         self._pack: Optional[BloomPack] = None
 
     # -- introspection ----------------------------------------------------
@@ -194,6 +201,7 @@ class LevelStore:
         self.n_bits = [r.n_bits for r in runs]
         self.ks = [r.k for r in runs]
         self.words_list = [r.words for r in runs]
+        self.tomb_seqs = [r.tomb_seq for r in runs]
         self.min_keys = np.array([r.keys[0] if len(r) else 0 for r in runs],
                                  np.uint64)
         self.max_keys = np.array([r.keys[-1] if len(r) else 0 for r in runs],
@@ -204,7 +212,7 @@ class LevelStore:
         keys, vals = self.run_slice(r)
         return RunData(keys=keys, vals=vals, flushes=self.flushes[r],
                        n_bits=self.n_bits[r], k=self.ks[r],
-                       words=self.words_list[r])
+                       words=self.words_list[r], tomb_seq=self.tomb_seqs[r])
 
     def runs(self) -> List[RunData]:
         return [self._as_rundata(r) for r in range(self.num_runs)]
@@ -283,18 +291,30 @@ class RunStore:
         if drop_tombstones:
             live = vals_u != TOMB
             keys_u, vals_u = keys_u[live], vals_u[live]
+            tomb_seq = -1
+        else:
+            in_seqs = [r.tomb_seq for r in inputs if r.tomb_seq >= 0]
+            tomb_seq = min(in_seqs) if in_seqs and \
+                bool((vals_u == TOMB).any()) else -1
         out = RunData.build(keys_u, vals_u, bits_per_key,
-                            flushes=sum(r.flushes for r in inputs))
+                            flushes=sum(r.flushes for r in inputs),
+                            tomb_seq=tomb_seq)
         stats.comp_pages_written += pages_of(len(out), epp)
         return out
 
     def execute(self, plan, incoming: Optional[RunData], stats,
                 bits_per_key: float) -> Optional[RunData]:
         """Apply one MergePlan.  Returns the spill output (the run the engine
-        must re-push at ``plan.target_level``) or None for in-level plans."""
+        must re-push at ``plan.target_level``) or None for in-level plans.
+
+        "spill" accepts ``incoming=None`` (maintenance-triggered pushes, e.g.
+        tombstone-TTL sweeps, have no arriving run); "clamp" merges the
+        ``len(run_ids)`` newest runs (>= 2), honoring ``drop_tombstones`` for
+        deepest-level squeezes; "partial" is the key-range-sliced merge."""
         lv = self.level(plan.level)
         if plan.kind == "spill":
-            merged = self.merge([incoming] + lv.runs(), bits_per_key, stats,
+            head = [incoming] if incoming is not None else []
+            merged = self.merge(head + lv.runs(), bits_per_key, stats,
                                 drop_tombstones=plan.drop_tombstones)
             lv._set_runs([])
             return merged
@@ -308,7 +328,78 @@ class RunStore:
             return None
         if plan.kind == "clamp":
             runs = lv.runs()
-            merged = self.merge(runs[:2], bits_per_key, stats)
-            lv._set_runs([merged] + runs[2:])
+            n = max(2, len(plan.run_ids))
+            merged = self.merge(runs[:n], bits_per_key, stats,
+                                drop_tombstones=plan.drop_tombstones)
+            lv._set_runs([merged] + runs[n:])
+            return None
+        if plan.kind == "partial":
+            self._execute_partial(plan, stats, bits_per_key)
             return None
         raise ValueError(f"unknown plan kind {plan.kind!r}")
+
+    def _slice_level(self, level: int, lo: np.uint64, hi: np.uint64,
+                     ) -> List[RunData]:
+        """Extract the ``[lo, hi)`` key slice out of every run of ``level``.
+
+        Returns the extracted pieces newest-first and rewrites the level's
+        runs as their remainders in place (empty remainders vanish).  The
+        remainder of a sorted run is two sorted segments around a gap, so it
+        stays a valid run; its Bloom parameters are re-derived from the new
+        length (words lazily rebuilt on next probe); the flush lineage is
+        apportioned by entry count (conserved, so repeated slicing cannot
+        inflate it) and the tombstone age inherited conservatively."""
+        lv = self.level(level)
+        pieces: List[RunData] = []
+        remainders: List[RunData] = []
+        for r in range(lv.num_runs):
+            keys, vals = lv.run_slice(r)
+            i = int(np.searchsorted(keys, lo, side="left"))
+            j = int(np.searchsorted(keys, hi, side="left"))
+            if i == j:                        # run untouched by the slice
+                remainders.append(lv._as_rundata(r))
+                continue
+            n = len(keys)
+            # exact conservation (piece + remainder == original, pieces may
+            # carry 0): repeated slicing must not inflate total lineage
+            piece_fl = min(lv.flushes[r],
+                           max(0, round(lv.flushes[r] * (j - i) / n)))
+            pieces.append(RunData.build(
+                keys[i:j], vals[i:j], self._bpk_of(lv, r),
+                flushes=piece_fl, tomb_seq=lv.tomb_seqs[r]))
+            rem_keys = np.concatenate([keys[:i], keys[j:]])
+            if len(rem_keys):
+                rem_vals = np.concatenate([vals[:i], vals[j:]])
+                tomb = lv.tomb_seqs[r] if bool((rem_vals == TOMB).any()) \
+                    else -1
+                remainders.append(RunData.build(
+                    rem_keys, rem_vals, self._bpk_of(lv, r),
+                    flushes=lv.flushes[r] - piece_fl, tomb_seq=tomb))
+        lv._set_runs(remainders)
+        return pieces
+
+    @staticmethod
+    def _bpk_of(lv: LevelStore, r: int) -> float:
+        """Recover a run's bits-per-key ratio for re-derived sub-runs."""
+        n = lv.run_len(r)
+        return lv.n_bits[r] / n if n else 1.0
+
+    def _execute_partial(self, plan, stats, bits_per_key: float) -> None:
+        """Key-range-sliced merge: extract ``[key_lo, key_hi)`` from every
+        run of the source level AND the target level, merge the pieces
+        (source pieces are newer), and place the output as the target
+        level's newest run.  Remainders stay where they were — only the
+        slice's pages are read and written, which is the whole point of
+        partial compaction (bounded per-trigger I/O)."""
+        lo = np.uint64(plan.key_lo)
+        hi_int = int(plan.key_hi)
+        hi = np.uint64(min(hi_int, 2 ** 64 - 1))
+        src = self._slice_level(plan.level, lo, hi)
+        tgt = self._slice_level(plan.target_level, lo, hi)
+        inputs = src + tgt                     # source level is newer
+        if not inputs:
+            return
+        merged = self.merge(inputs, bits_per_key, stats,
+                            drop_tombstones=plan.drop_tombstones)
+        if len(merged):
+            self.place_run(plan.target_level, merged)

@@ -296,6 +296,53 @@ def run_fleet(trees: Sequence[LSMTree], sessions,
     return out
 
 
+def run_policy_fleet(phis, sys, policies, sessions, n_keys: int,
+                     n_queries: int = 2000, seed: int = 7,
+                     key_space: int = 2 ** 48, range_fraction: float = 2e-5,
+                     policy_params=None, entry_bytes: int = 64,
+                     f_a: float = 1.0, f_seq: float = 1.0, seeds=None,
+                     zipf_a: Optional[float] = None):
+    """The (tuning x compaction-policy x session) grid in one fleet call.
+
+    Builds one tree per (phi, policy) cell — ``phis`` are tuner outputs
+    (:class:`repro.core.Phi`), ``policies`` names from
+    :data:`repro.lsm.planner.POLICIES`, ``policy_params`` an optional
+    per-policy dict of constructor kwargs — populates every tree from ONE
+    shared key draw, and runs every session against every tree via
+    :func:`run_fleet` (each session materialized once for the whole grid).
+
+    Returns ``(trees, results)`` with both indexed ``[phi][policy]``:
+    ``results[p][j][s]`` is the :class:`SessionResult` of tuning ``p``
+    under policy ``policies[j]`` on session ``s``.
+    """
+    try:
+        phis = list(phis)
+    except TypeError:
+        phis = [phis]
+    policy_params = policy_params or {}
+    keys = draw_keys(n_keys, seed=seed, key_space=key_space)
+    trees: List[List[LSMTree]] = []
+    for phi in phis:
+        row = []
+        for pol in policies:
+            params = tuple(sorted(policy_params.get(pol, {}).items()))
+            tree = LSMTree.from_phi(phi, sys, expected_entries=n_keys,
+                                    entry_bytes=entry_bytes, policy=pol,
+                                    policy_params=params)
+            populate(tree, n_keys, key_space=key_space, keys=keys)
+            row.append(tree)
+        trees.append(row)
+    flat = [t for row in trees for t in row]
+    results_flat = run_fleet(flat, sessions, keys, n_queries=n_queries,
+                             seeds=seeds, key_space=key_space,
+                             range_fraction=range_fraction, f_a=f_a,
+                             f_seq=f_seq, zipf_a=zipf_a)
+    n_pol = len(policies)
+    results = [results_flat[i * n_pol:(i + 1) * n_pol]
+               for i in range(len(phis))]
+    return trees, results
+
+
 def measured_cost_vector(tree_factory, n_keys: int, n_queries: int = 2000,
                          seed: int = 0) -> np.ndarray:
     """Measure per-class I/O costs (z0, z1, q, w) with pure sessions.
