@@ -1,20 +1,21 @@
 """Compaction design-space evaluation: measured vs model, per policy.
 
-Deploys ONE tuning under every compaction policy in the planner registry
-(K-LSM baseline + lazy leveling + partial compaction + tombstone-TTL),
-populates each tree from a shared 250k-key draw, seeds real tombstones
-(1% deletes, so the TTL sweeps have something to age out), and runs the
-same four drifted 10k-query sessions against every tree as ONE
-``run_fleet`` grid — the Section 9 experiment design extended along the
+ONE declarative spec deploys a single pinned tuning (``DesignSpec.fixed``)
+under every compaction policy in the planner registry (K-LSM baseline +
+lazy leveling + partial compaction + tombstone-TTL) — the policy axis as
+discrete arms — populates each tree from a shared 250k-key draw, seeds real
+tombstones (1% deletes, so the TTL sweeps have something to age out), and
+runs the same four drifted 10k-query sessions against every tree as ONE
+fleet grid: the Section 9 experiment design extended along the
 Sarkar-taxonomy policy axis.
 
 Per policy the suite reports measured avg I/O per query per session next
 to the cost model's prediction through
 :func:`repro.core.policy_effective_phi` (the policy's steady-state K
-profile), plus the policy-specific invariants: the lazy tree's last-level
-run count (read pressure keeps it squeezed), the TTL tree's maximum
-surviving tombstone age, and the partial tree's bounded per-trigger merge
-size.
+profile), plus the policy-specific invariants from the facade's tree
+probes: the lazy tree's last-level run count (read pressure keeps it
+squeezed), the TTL tree's maximum surviving tombstone age, and that
+deletes never resurface.
 
 Claims validated:
   * the model's predicted ORDERING of policies by cost matches the
@@ -25,25 +26,21 @@ Claims validated:
   * tombstone-TTL bounds delete persistence (max tombstone age <= TTL)
     at a measurable write-amplification premium on write-heavy sessions.
 
-Known, expected discrepancy: the lazy-leveling prediction assumes the
-full tiering steady state (K_i = T-1 runs on every upper level), but the
-measured tree runs *below* that — read-triggered squeezes plus fence
-pointers that skip non-overlapping runs (the paper's own Figure 12
-range-query discrepancy) make measured cost ~2x lower than predicted.
-The agreement_ratio column reports this honestly rather than fitting
-the model to the engine.
+The lazy-leveling prediction uses the *calibrated sub-tiering* steady
+state (``repro.core.LAZY_LEVELING_FILL``, measured ~1-1.6 live runs per
+upper level) instead of the old K = T-1 tiering ceiling, which documented
+a ~2x overestimate (agreement 0.45) on range-heavy mixes; the
+agreement_ratio column reports the remaining honest gap.
 """
 
 from __future__ import annotations
 
-import time
 from typing import List
 
 import numpy as np
 
-from repro.core import LSMSystem, cost_vector, make_phi, policy_effective_phi
-from repro.lsm import IOStats, LSMTree, draw_keys, populate, run_fleet
-from .common import Row
+from repro.api import (DesignSpec, ExperimentSpec, Row, TrialSpec,
+                       WorkloadSpec, run_experiment)
 
 N_KEYS = 250_000
 QUERIES = 10_000
@@ -55,75 +52,56 @@ DELETE_FRACTION = 0.01
 TTL_FLUSHES = 8        # short enough that sweeps fire inside the sessions
 T, FILT_BPE = 6, 4.0   # one mid-range leveled tuning, shared by all policies
 
-POLICY_PARAMS = {
-    "klsm": (),
-    "lazy_leveling": (("read_trigger", 512),),
-    "partial": (("parts", 4),),
-    "tombstone_ttl": (("ttl_flushes", TTL_FLUSHES),),
-}
+POLICIES = ("klsm", "lazy_leveling", "partial", "tombstone_ttl")
 # drifted sessions: dominant query type >= 80% (paper Section 9.2)
-SESSIONS = np.array([
-    [0.85, 0.05, 0.05, 0.05],
-    [0.05, 0.85, 0.05, 0.05],
-    [0.05, 0.05, 0.85, 0.05],
-    [0.05, 0.05, 0.05, 0.85],
-])
+SESSIONS = (
+    (0.85, 0.05, 0.05, 0.05),
+    (0.05, 0.85, 0.05, 0.05),
+    (0.05, 0.05, 0.85, 0.05),
+    (0.05, 0.05, 0.05, 0.85),
+)
+
+SPEC = ExperimentSpec(
+    name="compaction",
+    workload=WorkloadSpec(workloads=((0.25, 0.25, 0.25, 0.25),),
+                          rhos=(), nominal=True),
+    design=DesignSpec(fixed=(float(T), FILT_BPE, 1.0), policies=POLICIES,
+                      policy_params=(
+                          ("lazy_leveling", (("read_trigger", 512),)),
+                          ("partial", (("parts", 4),)),
+                          ("tombstone_ttl", (("ttl_flushes", TTL_FLUSHES),)),
+                      )),
+    trial=TrialSpec(n_keys=N_KEYS, n_queries=QUERIES, sessions=SESSIONS,
+                    key_space=KEY_SPACE, range_fraction=RANGE_FRACTION,
+                    key_seed=77, session_seeds=(200, 201, 202, 203),
+                    delete_fraction=DELETE_FRACTION),
+    system=(("N", float(N_KEYS)), ("entry_bits", 64.0 * 8),
+            ("page_bits", 4096.0 * 8), ("bits_per_entry", BITS_PER_ENTRY),
+            ("min_buf_bits", 64.0 * 8 * 64), ("s_rq", RANGE_FRACTION),
+            ("max_T", 30.0)),
+)
+CELL = (0, None)       # the single pinned-tuning cell
 
 
 def run() -> List[Row]:
-    policies = list(POLICY_PARAMS)
-    sys_small = LSMSystem(N=float(N_KEYS), entry_bits=64 * 8,
-                          page_bits=4096 * 8, bits_per_entry=BITS_PER_ENTRY,
-                          min_buf_bits=64 * 8 * 64, s_rq=RANGE_FRACTION,
-                          max_T=30)
-    phi = make_phi(T, FILT_BPE * N_KEYS, 1.0, sys_small)
-
-    t0 = time.time()
-    keys = draw_keys(N_KEYS, seed=77, key_space=KEY_SPACE)
-    dead = keys[:: int(1 / DELETE_FRACTION)]
-    trees = []
-    for pol in policies:
-        tree = LSMTree.from_phi(phi, sys_small, expected_entries=N_KEYS,
-                                entry_bytes=64, policy=pol,
-                                policy_params=POLICY_PARAMS[pol])
-        populate(tree, N_KEYS, key_space=KEY_SPACE, keys=keys)
-        for k in dead:                    # seed tombstones for TTL sweeps
-            tree.delete(int(k))
-        tree.flush()
-        tree.stats = IOStats()            # deletes are setup, not workload
-        trees.append(tree)
-    populate_s = time.time() - t0
-
-    t0 = time.time()
-    fleet = run_fleet(trees, SESSIONS, keys, n_queries=QUERIES,
-                      seeds=np.arange(200, 200 + len(SESSIONS)),
-                      key_space=KEY_SPACE, range_fraction=RANGE_FRACTION)
-    fleet_s = time.time() - t0
+    report = run_experiment(SPEC)
 
     rows: List[Row] = []
     measured_by_policy, model_by_policy = {}, {}
-    for j, pol in enumerate(policies):
-        tree = trees[j]
-        eff = policy_effective_phi(phi, sys_small, pol)
-        c = np.asarray(cost_vector(eff, sys_small), np.float64)
-        model = SESSIONS @ c
-        measured = np.array([r.avg_io_per_query for r in fleet[j]])
+    for pol in POLICIES:
+        measured = report.measured_io(CELL, pol)
+        model = report.model_session_io(CELL, SESSIONS, pol)
         measured_by_policy[pol] = measured
         model_by_policy[pol] = model
-        shape = tree.shape()
-        last_runs = len(shape[-1][1]) if shape else 0
-        max_tomb_age = max(
-            (tree.flush_seq - ts for lv in tree.store.levels
-             for ts in lv.tomb_seqs if ts >= 0), default=0)
+        probe = report.probes[(CELL, pol)]
         rows.append(Row(
             f"compaction_{pol}", 0.0,
             measured_io=[round(float(x), 3) for x in measured],
             model_io=[round(float(x), 3) for x in model],
             agreement_ratio=round(float(measured.mean() / model.mean()), 3),
-            last_level_runs=last_runs,
-            max_tombstone_age_flushes=int(max_tomb_age),
-            dead_keys_resurfaced=sum(
-                tree.get(int(k)) is not None for k in dead[:200]),
+            last_level_runs=probe.last_level_runs,
+            max_tombstone_age_flushes=int(probe.max_tombstone_age),
+            dead_keys_resurfaced=probe.dead_keys_resurfaced,
         ))
 
     # model-vs-system ranking agreement, pairwise per drifted session: only
@@ -132,34 +110,33 @@ def run() -> List[Row]:
     # deliberately predicts ties for them
     agree = total = 0
     for s in range(len(SESSIONS)):
-        for a in range(len(policies)):
-            for b in range(a + 1, len(policies)):
-                dm = model_by_policy[policies[a]][s] \
-                    - model_by_policy[policies[b]][s]
-                if abs(dm) < 0.02 * model_by_policy[policies[a]][s]:
+        for a in range(len(POLICIES)):
+            for b in range(a + 1, len(POLICIES)):
+                dm = model_by_policy[POLICIES[a]][s] \
+                    - model_by_policy[POLICIES[b]][s]
+                if abs(dm) < 0.02 * model_by_policy[POLICIES[a]][s]:
                     continue
-                de = measured_by_policy[policies[a]][s] \
-                    - measured_by_policy[policies[b]][s]
+                de = measured_by_policy[POLICIES[a]][s] \
+                    - measured_by_policy[POLICIES[b]][s]
                 total += 1
                 agree += (dm > 0) == (de > 0)
     lazy_w = float(measured_by_policy["lazy_leveling"][3])
     klsm_w = float(measured_by_policy["klsm"][3])
-    ttl_tree = trees[policies.index("tombstone_ttl")]
+    ttl_probe = report.probes[(CELL, "tombstone_ttl")]
     rows.append(Row(
         "compaction_summary", 0.0,
-        policies=len(policies),
+        policies=len(POLICIES),
         pairwise_rank_agreement=f"{agree}/{total}",
         lazy_beats_leveling_on_writes=lazy_w < klsm_w,
-        ttl_bound_holds=all(
-            ttl_tree.flush_seq - ts < TTL_FLUSHES
-            for lv in ttl_tree.store.levels
-            for ts in lv.tomb_seqs if ts >= 0),
+        ttl_bound_holds=all(age < TTL_FLUSHES
+                            for age in ttl_probe.tomb_ages),
     ))
+    walls = report.walls
     rows.append(Row(
-        "compaction_fleet", (populate_s + fleet_s) * 1e6,
-        n_keys=N_KEYS, n_queries=QUERIES, trees=len(trees),
+        "compaction_fleet", report.wall_time_s * 1e6,
+        n_keys=N_KEYS, n_queries=QUERIES, trees=len(report.fleet),
         sessions_per_tree=len(SESSIONS),
-        populate_s=round(populate_s, 2),
-        engine_s=round(populate_s + fleet_s, 2),
+        populate_s=round(walls["populate_s"], 2),
+        engine_s=round(walls["populate_s"] + walls["fleet_s"], 2),
     ))
     return rows

@@ -9,8 +9,10 @@ Claims: flexible designs win at KL ~ 0 (Fig 4 regime) but degrade like the
 classic nominal tunings under drift; only the robust tuning stays flat —
 robustness comes from the tuning process, not the design.
 
-Each design tunes *both* workloads in one batched dispatch (the design is a
-static jit argument, so the per-design calls stay separate compilations)."""
+One declarative spec per design space (the design is a static jit argument,
+so the per-design grids are separate compilations anyway), each tuning both
+workloads in one batched dispatch and scoring them over the same benchmark
+set."""
 
 from __future__ import annotations
 
@@ -19,42 +21,50 @@ from typing import List
 
 import numpy as np
 
-from repro.core import (EXPECTED_WORKLOADS, DesignSpace, kl_divergence,
-                        tune_nominal_many, tune_robust_many)
-from .common import B_SET, SYS, Row, costs_over_B
+from repro.api import (DesignSpec, ExperimentSpec, Row, WorkloadSpec,
+                       run_experiment)
+from repro.core import EXPECTED_WORKLOADS, kl_divergence
 
 WIDX = (7, 11)
 NOMINAL_MODELS = [
-    ("nominal_classic", DesignSpace.CLASSIC, 64),
-    ("lazy_leveling", DesignSpace.LAZY_LEVELING, 64),
-    ("dostoevsky", DesignSpace.DOSTOEVSKY, 64),
-    ("fluid", DesignSpace.FLUID, 64),
-    ("klsm", DesignSpace.KLSM, 192),
+    ("nominal_classic", "classic", 64),
+    ("lazy_leveling", "lazy_leveling", 64),
+    ("dostoevsky", "dostoevsky", 64),
+    ("fluid", "fluid", 64),
+    ("klsm", "klsm", 192),
 ]
 BINS = [(0.0, 0.2), (0.5, 1.0), (2.0, 6.0)]
 
 
+def _spec(name: str, space: str, n_starts: int, rhos=()) -> ExperimentSpec:
+    return ExperimentSpec(
+        name=f"fig19_{name}",
+        workload=WorkloadSpec(indices=WIDX, rhos=rhos, nominal=not rhos,
+                              bench_n=10_000, bench_seed=0),
+        design=DesignSpec(space=space, n_starts=n_starts, seed=0))
+
+
 def run() -> List[Row]:
     import jax.numpy as jnp
-    W = EXPECTED_WORKLOADS[list(WIDX)]
     t0 = time.time()
-    tunings = {}          # name -> [result for w7, result for w11]
-    for name, design, n_starts in NOMINAL_MODELS:
-        tunings[name] = tune_nominal_many(W, SYS, design, n_starts=n_starts,
-                                          seed=0)
-    rob = tune_robust_many(W, [2.0], SYS, seed=0)
-    tunings["endure_rho2"] = [rob[0][0], rob[1][0]]
-    us_tune = (time.time() - t0) * 1e6 / (len(tunings) * len(WIDX))
+    # name -> report with bench-set costs for [w7, w11]
+    reports = {name: run_experiment(_spec(name, space, n_starts))
+               for name, space, n_starts in NOMINAL_MODELS}
+    reports["endure_rho2"] = run_experiment(
+        _spec("endure_rho2", "classic", 64, rhos=(2.0,)))
+    us_tune = (time.time() - t0) * 1e6 / (len(reports) * len(WIDX))
 
     rows: List[Row] = []
     for k, widx in enumerate(WIDX):
         w = EXPECTED_WORKLOADS[widx]
+        B = reports["nominal_classic"].bench_set
         kls = np.asarray([float(kl_divergence(jnp.asarray(x),
                                               jnp.asarray(w)))
-                          for x in B_SET])
+                          for x in B])
         curves = {}
-        for name, results in tunings.items():
-            costs = costs_over_B(results[k].phi)
+        for name, rep in reports.items():
+            cell = (k, 2.0) if name == "endure_rho2" else (k, None)
+            costs = rep.bench_costs[cell]
             curves[name] = [float(costs[(kls >= lo) & (kls < hi)].mean())
                             for lo, hi in BINS]
 

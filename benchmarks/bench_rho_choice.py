@@ -5,7 +5,7 @@ Claim: nominal wins only (1) when the observed workload is ~= expected
 robust dominates.  Rule of thumb validated: pick rho ~= max pairwise KL of
 observed workloads.
 
-The six-rho robust sweep is one `tune_robust_many` dispatch."""
+One declarative spec: w7 x six rhos + nominal, model-scored over B."""
 
 from __future__ import annotations
 
@@ -14,27 +14,30 @@ from typing import List
 
 import numpy as np
 
-from repro.core import (EXPECTED_WORKLOADS, kl_divergence, tune_nominal,
-                        tune_robust_many)
-from .common import B_SET, SYS, Row, costs_over_B, delta_tp
+from repro.api import ExperimentSpec, Row, WorkloadSpec, run_experiment
+from repro.core import EXPECTED_WORKLOADS, kl_divergence
 
-W7 = EXPECTED_WORKLOADS[7]
 RHOS = (0.1, 0.25, 0.5, 1.0, 2.0, 3.0)
 KL_BINS = [(0.0, 0.2), (0.2, 0.6), (0.6, 1.2), (1.2, 2.5), (2.5, 10.0)]
+
+SPEC = ExperimentSpec(
+    name="fig9",
+    workload=WorkloadSpec(indices=(7,), rhos=RHOS, nominal=True,
+                          bench_n=10_000, bench_seed=0),
+)
 
 
 def run() -> List[Row]:
     import jax.numpy as jnp
     t0 = time.time()
-    rn = tune_nominal(W7, SYS, seed=0)
-    cn = costs_over_B(rn.phi)
-    robust = tune_robust_many([W7], RHOS, SYS, seed=0)[0]
-    kls = np.asarray([float(kl_divergence(jnp.asarray(w), jnp.asarray(W7)))
-                      for w in B_SET])
+    report = run_experiment(SPEC)
+    w7 = EXPECTED_WORKLOADS[7]
+    kls = np.asarray([float(kl_divergence(jnp.asarray(w), jnp.asarray(w7)))
+                      for w in report.bench_set])
 
     grid = {}
-    for j, rho in enumerate(RHOS):
-        d = delta_tp(cn, costs_over_B(robust[j].phi))
+    for rho in RHOS:
+        d = report.delta_tp_vs_nominal(0, rho)
         for lo, hi in KL_BINS:
             sel = (kls >= lo) & (kls < hi)
             if sel.any():

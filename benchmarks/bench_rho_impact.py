@@ -4,7 +4,8 @@ Fig 7: Delta(Phi_N, Phi_R) grows with the observed KL-divergence; rho=0
 matches nominal.  Fig 8: the throughput range Theta_B shrinks as rho grows
 (robustness = consistency).
 
-All four robust tunings come from one `tune_robust_many` dispatch."""
+One declarative spec: w11 x four rhos + the nominal baseline, model-scored
+over the benchmark set."""
 
 from __future__ import annotations
 
@@ -13,39 +14,42 @@ from typing import List
 
 import numpy as np
 
-from repro.core import (EXPECTED_WORKLOADS, kl_divergence, throughput_range,
-                        tune_nominal, tune_robust_many)
-from .common import B_SET, SYS, Row, costs_over_B, delta_tp
+from repro.api import ExperimentSpec, Row, WorkloadSpec, run_experiment
+from repro.core import EXPECTED_WORKLOADS, kl_divergence, throughput_range
 
-W11 = EXPECTED_WORKLOADS[11]
 RHOS = (0.0, 0.5, 1.0, 2.0)
+
+SPEC = ExperimentSpec(
+    name="fig7_8",
+    workload=WorkloadSpec(indices=(11,), rhos=RHOS, nominal=True,
+                          bench_n=10_000, bench_seed=0),
+)
 
 
 def run() -> List[Row]:
     import jax.numpy as jnp
     t0 = time.time()
-    rn = tune_nominal(W11, SYS, seed=0)
-    cn = costs_over_B(rn.phi)
-    robust = tune_robust_many([W11], RHOS, SYS, seed=0)[0]
+    report = run_experiment(SPEC)
+    B = report.bench_set
+    w11 = EXPECTED_WORKLOADS[11]
     kls = np.asarray([float(kl_divergence(jnp.asarray(w),
-                                          jnp.asarray(W11)))
-                      for w in B_SET])
+                                          jnp.asarray(w11)))
+                      for w in B])
     bins = [(0.0, 0.2), (0.2, 0.5), (0.5, 1.0), (1.0, 2.0), (2.0, 10.0)]
 
     rows: List[Row] = []
     theta_by_rho = {}
-    for j, rho in enumerate(RHOS):
-        rr = robust[j]
-        cr = costs_over_B(rr.phi)
-        d = delta_tp(cn, cr)
+    for rho in RHOS:
+        d = report.delta_tp_vs_nominal(0, rho)
         derived = {}
         for lo, hi in bins:
             sel = (kls >= lo) & (kls < hi)
             if sel.any():
                 derived[f"delta_kl_{lo}_{hi}"] = round(float(d[sel].mean()),
                                                        3)
-        theta = float(throughput_range(jnp.asarray(B_SET, jnp.float32),
-                                       rr.phi, SYS))
+        theta = float(throughput_range(jnp.asarray(B, jnp.float32),
+                                       report.tuning((0, rho)).phi,
+                                       report.sys))
         theta_by_rho[rho] = theta
         derived["theta_range"] = round(theta, 4)
         rows.append(Row(f"fig7_delta_vs_kl_rho{rho}", 0.0, **derived))

@@ -7,9 +7,10 @@ Paper claims reproduced here:
   * uniform (w0) is the one case where nominal stays ~5% ahead;
   * robust tunings win the overwhelming majority of the ~2M comparisons.
 
-The whole figure — 15 nominal tunings plus the full 15-workload x 5-rho
-robust grid — is two device dispatches (`tune_nominal_many` +
-`tune_robust_many`); only the benchmark-set evaluation happens per cell.
+The whole figure is one declarative :class:`repro.api.ExperimentSpec` —
+all 15 expected workloads x 5 rhos plus the nominal baselines, with model
+evaluation over the Section 7 benchmark set — lowered by the facade onto
+two batched-tuner dispatches.
 """
 
 from __future__ import annotations
@@ -20,26 +21,28 @@ from typing import List
 
 import numpy as np
 
-from repro.core import (EXPECTED_WORKLOADS, WORKLOAD_CATEGORY,
-                        tune_nominal_many, tune_robust_many)
-from .common import SYS, Row, costs_over_B, delta_tp
+from repro.api import ExperimentSpec, Row, WorkloadSpec, run_experiment
+from repro.core import WORKLOAD_CATEGORY
 
 RHOS = (0.25, 0.5, 1.0, 2.0, 3.0)
+
+SPEC = ExperimentSpec(
+    name="fig6",
+    workload=WorkloadSpec(indices=tuple(range(15)), rhos=RHOS,
+                          nominal=True, bench_n=10_000, bench_seed=0),
+)
 
 
 def run() -> List[Row]:
     t0 = time.time()
-    nominal = tune_nominal_many(EXPECTED_WORKLOADS, SYS, seed=0)
-    robust_grid = tune_robust_many(EXPECTED_WORKLOADS, RHOS, SYS, seed=0)
+    report = run_experiment(SPEC)
 
     cat_delta = defaultdict(lambda: defaultdict(list))
     wins = total = 0
-    for widx in range(len(EXPECTED_WORKLOADS)):
+    for widx in range(15):
         cat = WORKLOAD_CATEGORY[widx]
-        cn = costs_over_B(nominal[widx].phi)
-        for j, rho in enumerate(RHOS):
-            cr = costs_over_B(robust_grid[widx][j].phi)
-            d = delta_tp(cn, cr)
+        for rho in RHOS:
+            d = report.delta_tp_vs_nominal(widx, rho)
             cat_delta[cat][rho].append(float(d.mean()))
             wins += int((d > 0).sum())
             total += d.size

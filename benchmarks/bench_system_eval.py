@@ -1,18 +1,17 @@
 """Paper Table 5 + Figures 12-17 analogue: SYSTEM-measured (not model)
 delta throughput of robust vs nominal tunings on the executable LSM engine.
 
-Per expected workload: deploy Phi_N and Phi_R at reduced scale
-(LSMTree.from_phi), execute drifted workload sessions sampled from the
-uncertainty benchmark (dominant-query sessions like the paper's
-empty-read/read/range/write sessions), and measure avg I/O per query.
+Per expected workload: deploy Phi_N and Phi_R at reduced scale, execute
+drifted workload sessions sampled from the uncertainty benchmark, and
+measure avg I/O per query.
 
-The whole evaluation runs as one grid: the tunings come from a single
-``tune_nominal_many`` / ``tune_robust_many`` dispatch over every expected
-workload, and the (tuning x drifted-session) engine matrix is one
-``run_fleet`` call over the populated trees — the columnar engine's batched
-read/write/range primitives carry each session.  The scale (250k keys, 10k
-queries per session) is ~20x the pre-refactor engine's 60k x 2k at lower
-wall clock.
+The whole evaluation is ONE declarative spec: five expected workloads, the
+nominal baseline plus rho=1 robust cells, and a Table-5 trial
+(``per_workload_keys``: the nominal/robust pair of a workload shares its
+key draw and session seeds, so the facade's fleet call materializes each
+drifted session once and replays it on both trees).  The facade lowers it
+onto the same two batched-tuner dispatches and single ``run_fleet`` grid
+the hand-wired version used, at 250k keys x 10k queries per session.
 
 Claims validated:
   * robust beats nominal on most expected workloads (Table 5: 10 of 15,
@@ -24,15 +23,12 @@ Claims validated:
 
 from __future__ import annotations
 
-import time
 from typing import List
 
 import numpy as np
 
-from repro.core import (EXPECTED_WORKLOADS, LSMSystem, cost_vector,
-                        tune_nominal_many, tune_robust_many)
-from repro.lsm import LSMTree, draw_keys, populate, run_fleet
-from .common import Row
+from repro.api import (ExperimentSpec, Row, TrialSpec, WorkloadSpec,
+                       run_experiment)
 
 N_KEYS = 250_000
 QUERIES = 10_000
@@ -41,64 +37,50 @@ RANGE_FRACTION = 1e-3
 RHO = 1.0
 BITS_PER_ENTRY = 6.0   # memory-constrained: deeper trees (L=2-4) at small N
 MAX_T = 30             # cap T so the scaled-down tree cannot degenerate to L=1
+WIDX = (0, 4, 7, 11, 13)
 # drifted sessions: dominant query type >= 80% (paper Section 9.2)
-SESSIONS = np.array([
-    [0.85, 0.05, 0.05, 0.05],
-    [0.05, 0.85, 0.05, 0.05],
-    [0.05, 0.05, 0.85, 0.05],
-    [0.05, 0.05, 0.05, 0.85],
-])
+SESSIONS = (
+    (0.85, 0.05, 0.05, 0.05),
+    (0.05, 0.85, 0.05, 0.05),
+    (0.05, 0.05, 0.85, 0.05),
+    (0.05, 0.05, 0.05, 0.85),
+)
+
+def make_spec(widx_list=WIDX) -> ExperimentSpec:
+    return ExperimentSpec(
+        name="tab5",
+        workload=WorkloadSpec(indices=tuple(widx_list), rhos=(RHO,),
+                              nominal=True),
+        trial=TrialSpec(n_keys=N_KEYS, n_queries=QUERIES, sessions=SESSIONS,
+                        key_space=KEY_SPACE, range_fraction=RANGE_FRACTION,
+                        per_workload_keys=True, key_seed=100),
+        system=(("N", float(N_KEYS)), ("entry_bits", 64.0 * 8),
+                ("page_bits", 4096.0 * 8),
+                ("bits_per_entry", BITS_PER_ENTRY),
+                ("min_buf_bits", 64.0 * 8 * 64), ("s_rq", 2e-5),
+                ("max_T", float(MAX_T))),
+    )
 
 
-def run(widx_list=(0, 4, 7, 11, 13)) -> List[Row]:
-    sys_small = LSMSystem(N=float(N_KEYS), entry_bits=64 * 8,
-                          page_bits=4096 * 8, bits_per_entry=BITS_PER_ENTRY,
-                          min_buf_bits=64 * 8 * 64, s_rq=2e-5, max_T=MAX_T)
-    W = np.stack([EXPECTED_WORKLOADS[w] for w in widx_list])
+SPEC = make_spec()
 
-    t0 = time.time()
-    nominals = tune_nominal_many(W, sys_small, seed=0)
-    robusts = [row[0] for row in tune_robust_many(W, [RHO], sys_small,
-                                                  seed=0)]
-    tuning_s = time.time() - t0
 
-    # one populated tree per tuning; the nominal/robust pair of a workload
-    # shares its key draw and session seeds, so run_fleet materializes each
-    # drifted session once and replays it on both trees
-    t0 = time.time()
-    trees, keys_list, seed_rows = [], [], []
-    for widx, rn, rr in zip(widx_list, nominals, robusts):
-        keys = draw_keys(N_KEYS, seed=100 + widx, key_space=KEY_SPACE)
-        for tuning in (rn, rr):
-            tree = LSMTree.from_phi(tuning.phi, sys_small,
-                                    expected_entries=N_KEYS, entry_bytes=64)
-            populate(tree, N_KEYS, key_space=KEY_SPACE, keys=keys)
-            trees.append(tree)
-            keys_list.append(keys)
-            seed_rows.append([100 + widx + i for i in range(len(SESSIONS))])
-    populate_s = time.time() - t0
-
-    t0 = time.time()
-    fleet = run_fleet(trees, SESSIONS, keys_list, n_queries=QUERIES,
-                      seeds=np.asarray(seed_rows), key_space=KEY_SPACE,
-                      range_fraction=RANGE_FRACTION)
-    fleet_s = time.time() - t0
+def run(widx_list=WIDX) -> List[Row]:
+    report = run_experiment(make_spec(widx_list))
 
     rows: List[Row] = []
     n_wins = 0
     ranking_agree = 0
     leveling_robust = 0
     for i, widx in enumerate(widx_list):
-        rn, rr = nominals[i], robusts[i]
-        io_n = float(np.mean([r.avg_io_per_query for r in fleet[2 * i]]))
-        io_r = float(np.mean([r.avg_io_per_query for r in fleet[2 * i + 1]]))
+        rn, rr = report.tuning((i, None)), report.tuning((i, RHO))
+        io_n = float(report.measured_io((i, None)).mean())
+        io_r = float(report.measured_io((i, RHO)).mean())
         delta = (1.0 / io_r - 1.0 / io_n) / (1.0 / io_n)
         n_wins += delta > 0
         # model prediction for the same drifted sessions
-        cn = float(np.mean(SESSIONS @ np.asarray(
-            cost_vector(rn.phi, sys_small), np.float64)))
-        cr = float(np.mean(SESSIONS @ np.asarray(
-            cost_vector(rr.phi, sys_small), np.float64)))
+        cn = float(report.model_session_io((i, None), SESSIONS).mean())
+        cr = float(report.model_session_io((i, RHO), SESSIONS).mean())
         ranking_agree += (cr < cn) == (io_r < io_n)
         leveling_robust += bool(np.allclose(np.asarray(rr.phi.K)[:2], 1.0))
         rows.append(Row(
@@ -110,13 +92,14 @@ def run(widx_list=(0, 4, 7, 11, 13)) -> List[Row]:
             nominal=f"T{float(rn.phi.T):.0f}",
             robust=f"T{float(rr.phi.T):.0f}",
         ))
+    walls = report.walls
     rows.append(Row(
-        "tab5_fleet", (tuning_s + populate_s + fleet_s) * 1e6,
+        "tab5_fleet", report.wall_time_s * 1e6,
         n_keys=N_KEYS, n_queries=QUERIES,
-        trees=len(trees), sessions_per_tree=len(SESSIONS),
-        tuning_s=round(tuning_s, 2),
-        populate_s=round(populate_s, 2),
-        engine_s=round(populate_s + fleet_s, 2),
+        trees=len(report.fleet), sessions_per_tree=len(SESSIONS),
+        tuning_s=round(walls["tuning_s"], 2),
+        populate_s=round(walls["populate_s"], 2),
+        engine_s=round(walls["populate_s"] + walls["fleet_s"], 2),
     ))
     rows.append(Row(
         "tab5_summary", 0.0,

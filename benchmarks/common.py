@@ -1,50 +1,27 @@
-"""Shared helpers for the paper-reproduction benchmarks."""
+"""Shared helpers for the paper-reproduction benchmarks.
+
+The row/formatting/metric layer lives in :mod:`repro.api.report` (the
+unified report schema) since the experiment-API refactor; this module keeps
+the benchmark-local singletons (the paper-scale system and the Section 7
+benchmark set) and re-exports the helpers so pre-facade suites keep their
+imports.
+"""
 
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, List, Tuple
-
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (EXPECTED_WORKLOADS, DesignSpace, LSMSystem,
-                        cost_vector, sample_benchmark, tune_nominal,
-                        tune_robust)
+from repro.api.report import (Row, costs_over_benchmark, delta_tp, fmt,
+                              timed)
+from repro.core import LSMSystem, sample_benchmark
+
+__all__ = ["SYS", "B_SET", "Row", "timed", "fmt", "costs_over_B",
+           "delta_tp"]
 
 SYS = LSMSystem()
 B_SET = sample_benchmark(10_000, seed=0)
 
 
-def timed(fn: Callable, *args, **kw) -> Tuple[float, object]:
-    t0 = time.time()
-    out = fn(*args, **kw)
-    return (time.time() - t0) * 1e6, out
-
-
-class Row:
-    """One CSV output row: name,us_per_call,derived."""
-
-    def __init__(self, name: str, us: float, **derived):
-        self.name = name
-        self.us = us
-        self.derived = derived
-
-    def csv(self) -> str:
-        d = ";".join(f"{k}={v}" for k, v in self.derived.items())
-        return f"{self.name},{self.us:.1f},{d}"
-
-
-def fmt(x: float) -> str:
-    return f"{x:.4g}"
-
-
 def costs_over_B(phi, sys=SYS) -> np.ndarray:
     """C(w, phi) for every workload in the benchmark set (vectorized)."""
-    c = np.asarray(cost_vector(phi, sys), np.float64)
-    return B_SET @ c
-
-
-def delta_tp(cn: np.ndarray, cr: np.ndarray) -> np.ndarray:
-    """Normalized delta throughput of robust (cr) vs nominal (cn)."""
-    return (1.0 / cr - 1.0 / cn) / (1.0 / cn)
+    return costs_over_benchmark(phi, sys, B_SET)

@@ -6,10 +6,16 @@ Usage:
     PYTHONPATH=src python -m benchmarks.run fig6 tab5        # substring filter
     PYTHONPATH=src python -m benchmarks.run --json out/      # + BENCH_*.json
     PYTHONPATH=src python -m benchmarks.run --check tuner tab5   # perf gate
+    PYTHONPATH=src python -m benchmarks.run --spec exp.json  # run any spec
 
 ``--json OUT`` writes one ``BENCH_<suite>.json`` per executed suite into the
 OUT directory: per-suite wall time plus every row's derived metrics, so later
 PRs have a machine-readable perf trajectory to compare against.
+
+``--spec FILE.json`` runs an arbitrary :class:`repro.api.ExperimentSpec`
+(the declarative experiment facade) end-to-end and emits its report in the
+same CSV/BENCH-json formats — new scenarios need a JSON file, not a new
+bench script.  The spec's ``name`` becomes the suite name.
 
 ``--check`` re-runs the selected suites and diffs the measured perf
 trajectory against the committed ``BENCH_<suite>.json`` baselines
@@ -23,12 +29,13 @@ checked suite with no committed baseline (a new suite must commit its
 selects no suite at all (a typo would otherwise pass vacuously).
 
 ``--list`` prints the suite names one per line (for CI job matrices) and
-exits.
+exits; ``--list --gated`` prints only the suites the perf gate watches
+(the ``CHECK_METRICS`` keys), so CI derives its gate list from here instead
+of hardcoding it.
 """
 
 import argparse
 import json
-import math
 import os
 import time
 import traceback
@@ -45,6 +52,9 @@ CHECK_METRICS = {
     },
     "compaction": {
         "compaction_fleet.engine_s": "lower",
+    },
+    "api": {
+        "api_fleet.engine_s": "lower",
     },
 }
 
@@ -68,6 +78,7 @@ SUITE_MODULES = [
     ("roofline", "bench_roofline"),
     ("robust_sharding", "bench_robust_sharding"),
     ("compaction", "bench_compaction_space"),
+    ("api", "bench_api"),
 ]
 
 
@@ -126,25 +137,29 @@ def _check_suite(key, rows, wall, base, tol):
 
 
 def _jsonable(x):
-    """Best-effort conversion of derived metric values to *strict* JSON types
-    (non-finite floats become null: consumers parse these files with strict
-    parsers, which reject the bare NaN/Infinity literals json.dump emits)."""
-    if isinstance(x, dict):
-        return {str(k): _jsonable(v) for k, v in x.items()}
-    if isinstance(x, (list, tuple)):
-        return [_jsonable(v) for v in x]
-    if isinstance(x, bool) or x is None:
-        return x
-    if hasattr(x, "item"):          # numpy / jax scalars
-        try:
-            return _jsonable(x.item())
-        except Exception:
-            return str(x)
-    if isinstance(x, float):
-        return x if math.isfinite(x) else None
-    if isinstance(x, (int, str)):
-        return x
-    return str(x)
+    """Strict-JSON coercion; one implementation, in the report module."""
+    from repro.api.report import jsonable
+    return jsonable(x)
+
+
+def _run_spec(args) -> None:
+    """``--spec FILE.json``: run one declarative experiment end-to-end."""
+    from repro.api import ExperimentSpec, run_experiment
+    with open(args.spec) as f:
+        spec = ExperimentSpec.from_json(f.read())
+    print(f"# spec {args.spec!r} -> experiment {spec.name!r} "
+          f"(backend={spec.backend})", flush=True)
+    print("name,us_per_call,derived")
+    report = run_experiment(spec)
+    rows = report.rows()
+    for row in rows:
+        print(row.csv(), flush=True)
+    print(f"# {spec.name} done in {report.wall_time_s:.1f}s", flush=True)
+    if args.json:
+        os.makedirs(args.json, exist_ok=True)
+        path = os.path.join(args.json, f"BENCH_{spec.name}.json")
+        report.write_bench_json(path, rows)
+        print(f"# wrote {path}", flush=True)
 
 
 def main() -> None:
@@ -159,6 +174,12 @@ def main() -> None:
                              "or a filter matching no suite")
     parser.add_argument("--list", action="store_true",
                         help="print the available suite names and exit")
+    parser.add_argument("--gated", action="store_true",
+                        help="with --list: print only the perf-gated suites "
+                             "(CHECK_METRICS keys)")
+    parser.add_argument("--spec", metavar="FILE.json", default=None,
+                        help="run one declarative repro.api.ExperimentSpec "
+                             "and emit its report (honors --json)")
     parser.add_argument("--baseline", metavar="DIR",
                         default=os.path.join(os.path.dirname(__file__), ".."),
                         help="baseline directory for --check "
@@ -170,7 +191,16 @@ def main() -> None:
 
     if args.list:
         for key, _ in SUITE_MODULES:
-            print(key)
+            if not args.gated or key in CHECK_METRICS:
+                print(key)
+        return
+    if args.spec:
+        if args.check:
+            parser.error("--spec and --check are mutually exclusive: the "
+                         "gate runs registered suites against committed "
+                         "baselines; to gate a spec-driven experiment, add "
+                         "it as a suite with a CHECK_METRICS entry")
+        _run_spec(args)
         return
     selected_names = [(key, name) for key, name in SUITE_MODULES
                       if not args.filters or any(f in key for f in

@@ -1,63 +1,51 @@
-"""Beyond-paper: ENDURE's robust-tuning paradigm applied to *mesh/layout
-selection under uncertain serving mix*.
+"""Beyond-paper: a robust re-tuning storm as ONE declarative experiment.
 
-The paper's workload vector (z0, z1, q, w) maps 1:1 onto a serving fleet's
-step mix (train, prefill, decode, long-context); the cost vector c(Phi)
-comes from the dry-run roofline terms of each candidate layout.  The same
-KL-ball dual (repro.core.robust.robust_cost) then picks the layout with the
-best worst-case step time — a layout that stays good when the traffic mix
-drifts (e.g. a long-context burst).
+The pre-facade version of this example hand-wired the pipeline (nominal
+pick, per-rho dual grids, burst evaluation).  It is now a ~15-line
+:class:`repro.api.ExperimentSpec`: an uncertain ZippyDB-like serving mix, a
+rho storm (0.25 / 1 / 2), the compaction policy as a discrete arm tuned
+jointly, and model scoring over a sampled benchmark set.  The spec is JSON
+(``benchmarks/run.py --spec`` runs the same experiment with no code), and
+the ``backend`` field scales it from this laptop (inline / single-device
+fallback) to a device mesh (``sharded``) or a worker pool (``subprocess``)
+unchanged.
 
     PYTHONPATH=src python examples/robust_serving.py
 """
 
-import numpy as np
+from repro.api import (DesignSpec, ExperimentSpec, WorkloadSpec,
+                       run_experiment)
+from repro.core import zippydb_like
 
-from repro.core.robust_sharding import (LayoutCandidate, nominal_layout,
-                                        robust_layout_sweep, worst_case_grid)
+RHOS = (0.25, 1.0, 2.0)
+
+SPEC = ExperimentSpec(
+    name="serving_storm",
+    workload=WorkloadSpec(workloads=(tuple(zippydb_like()),), rhos=RHOS,
+                          nominal=True, bench_n=4000),
+    design=DesignSpec(policies=("klsm", "lazy_leveling"), n_starts=32,
+                      steps=150),
+    backend="sharded",     # device-sharded sweep; inline on one device
+)
 
 
 def main() -> None:
-    # Candidate layouts for one pod (16x16): step-time vectors over the four
-    # step classes (train, prefill, decode, long), in seconds.  These come
-    # from dry-run roofline terms of the corresponding mesh/override combos
-    # (see experiments/dryrun and EXPERIMENTS.md section Perf); a fleet
-    # would regenerate them per model/hardware rev.
-    candidates = [
-        LayoutCandidate("tp16_fsdp16", np.array([17.8, 6.3, 0.9, 9.0])),
-        # fastest training layout, but no SP path: 500k contexts thrash it
-        LayoutCandidate("tp8_fsdp32", np.array([14.9, 5.1, 1.4, 40.0])),
-        # slightly slower train, KV-sequence-parallel decode: flat tail
-        LayoutCandidate("tp16_sp_decode", np.array([18.5, 6.6, 0.7, 1.1])),
-        LayoutCandidate("tp4_fsdp64", np.array([16.2, 7.9, 2.8, 6.0])),
-    ]
-
-    expected_mix = np.array([0.70, 0.15, 0.14, 0.01])  # training-dominated
-
-    nom = nominal_layout(candidates, expected_mix)
-    print(f"nominal pick for expected mix: {nom.name} "
-          f"(expected step {nom.expected_cost(expected_mix):.2f}s)")
-
-    # A re-tuning storm: every rho re-evaluated in ONE batched dual grid
-    # (vmap over candidates x rhos) instead of a per-rho robust_layout loop.
-    rhos = (0.25, 1.0, 2.0)
-    grid = worst_case_grid(candidates, expected_mix, rhos)
-    nom_idx = next(i for i, c in enumerate(candidates) if c is nom)
-    for j, rho in enumerate(rhos):
-        best = int(np.argmin(grid[:, j]))
-        print(f"rho={rho:4.2f}: robust pick = {candidates[best].name} "
-              f"(worst-case step {grid[best, j]:.2f}s vs nominal's "
-              f"{grid[nom_idx, j]:.2f}s)")
-
-    # A long-context burst materializes:
-    burst = np.array([0.30, 0.10, 0.20, 0.40])
-    print("\nunder a long-context burst (40% long steps):")
-    for c in candidates:
-        print(f"  {c.name:16s} realized step {c.expected_cost(burst):.2f}s")
-    rob = robust_layout_sweep(candidates, expected_mix, [1.0])[0]
-    print(f"robust pick '{rob.name}' was "
-          f"{'the' if rob.name == min(candidates, key=lambda c: c.expected_cost(burst)).name else 'near the'}"
-          f" best layout for the burst — chosen before it happened.")
+    report = run_experiment(SPEC)
+    nom = report.tuning((0, None))
+    print(f"nominal pick for expected mix: {nom.describe(report.sys)} "
+          f"policy={report.chosen[(0, None)]} "
+          f"(expected cost {nom.cost:.3f})")
+    for rho in RHOS:
+        cell = (0, rho)
+        rr = report.tuning(cell)
+        d = report.delta_tp_vs_nominal(0, rho)
+        print(f"rho={rho:4.2f}: robust pick {rr.describe(report.sys)} "
+              f"policy={report.chosen[cell]} "
+              f"(worst-case {rr.cost:.3f}; mean Delta-throughput vs nominal "
+              f"over drifted mixes {d.mean():+.1%})")
+    print("\nthe spec is data — save it and re-run with\n"
+          "  python -m benchmarks.run --spec serving_storm.json:\n")
+    print(SPEC.to_json())
 
 
 if __name__ == "__main__":

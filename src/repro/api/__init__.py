@@ -1,0 +1,69 @@
+"""The unified experiment API: declarative specs over the whole stack.
+
+One call::
+
+    from repro.api import ExperimentSpec, WorkloadSpec, run_experiment
+
+    spec = ExperimentSpec(
+        name="demo",
+        workload=WorkloadSpec(indices=(7, 11), rhos=(1.0,), bench_n=2000),
+    )
+    report = run_experiment(spec)
+
+lowers the spec (:mod:`repro.api.compile`) onto the batched tuners and the
+fleet executor, runs it on the spec's execution backend
+(:mod:`repro.api.backends`), and returns one :class:`repro.api.Report`
+(:mod:`repro.api.report`) — serializable in the ``BENCH_<suite>.json``
+schema the perf gate consumes.  Specs round-trip through JSON, so
+``benchmarks/run.py --spec FILE.json`` runs any experiment with no new
+bench script.
+"""
+
+from __future__ import annotations
+
+import time
+
+from .backends import (BACKENDS, ExecutionBackend, InlineBackend,
+                       ShardedBackend, SubprocessBackend, execute_trial,
+                       get_backend)
+from .compile import (CompiledExperiment, TrialPlan, TuningPlan,
+                      compile_spec)
+from .report import (Report, Row, TreeProbe, costs_over_benchmark, delta_tp,
+                     fmt, jsonable, timed)
+from .spec import DesignSpec, ExperimentSpec, TrialSpec, WorkloadSpec
+
+__all__ = [
+    "ExperimentSpec", "WorkloadSpec", "DesignSpec", "TrialSpec",
+    "Report", "Row", "TreeProbe", "run_experiment",
+    "compile_spec", "CompiledExperiment", "TuningPlan", "TrialPlan",
+    "BACKENDS", "ExecutionBackend", "InlineBackend", "ShardedBackend",
+    "SubprocessBackend", "get_backend", "execute_trial",
+    "costs_over_benchmark", "delta_tp", "timed", "fmt", "jsonable",
+]
+
+
+def run_experiment(spec: ExperimentSpec, backend=None) -> Report:
+    """Compile and execute an :class:`ExperimentSpec`; returns its
+    :class:`Report`.
+
+    ``backend`` overrides the spec's backend instance (e.g. a
+    pre-configured :class:`SubprocessBackend`); by default the spec's
+    ``backend`` / ``backend_params`` fields select it."""
+    cx = compile_spec(spec)
+    if backend is None:
+        backend = get_backend(spec.backend, spec.backend_params)
+
+    t0 = time.time()
+    solved = {design: backend.solve(plan)
+              for design, plan in cx.tuning_plans().items()}
+    tuning_s = time.time() - t0
+
+    t0 = time.time()
+    report = cx.select_arms(solved)
+    report.walls["tuning_s"] = tuning_s
+    report.walls["select_s"] = time.time() - t0
+
+    trial = cx.build_trial(report)
+    if trial is not None:
+        backend.run_trial(trial, report)
+    return report

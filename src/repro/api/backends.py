@@ -1,0 +1,329 @@
+"""Pluggable execution backends: the *where/how* axis of an experiment.
+
+A backend executes a compiled experiment's two heavy phases — the batched
+tuning grid and the engine fleet trial — without changing their semantics:
+
+* :class:`InlineBackend` (``"inline"``, default) — today's single-process
+  path: one ``tune_nominal_many`` / ``tune_robust_many`` vmap grid per
+  plan, one :func:`repro.lsm.run_fleet` call for the whole (tree x session)
+  grid.  Every other backend must produce results identical to this one.
+* :class:`ShardedBackend` (``"sharded"``) — splits the flattened
+  (workload x rho) problem axis across JAX devices with a 1-D
+  ``launch.mesh`` mesh + ``NamedSharding`` (each device solves a contiguous
+  slab of the grid's vmap lanes).  On a single-device host it falls back to
+  the inline path, so the same spec runs anywhere — the per-lane solves are
+  independent, which is what makes the sharding semantics-free.
+* :class:`SubprocessBackend` (``"subprocess"``) — shards the fleet grid's
+  *trees* across worker processes (spawned, jax-free: the engine is pure
+  numpy).  Trees sharing a key draw stay on one worker so materialized
+  session plans stay shared; tuning falls back inline.
+
+Backends are registered in :data:`BACKENDS`; the spec's ``backend`` field
+selects one, so the same experiment scales from laptop to cluster by
+flipping a string.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .compile import TreeBuild, TrialPlan, TuningPlan
+from .report import Cell, Report, TreeProbe
+
+
+# ---------------------------------------------------------------------------
+# The shared (jax-free) trial executor
+# ---------------------------------------------------------------------------
+
+class _SysLite:
+    """The two LSMSystem fields ``LSMTree.from_phi`` reads, as plain floats
+    (worker processes never import jax)."""
+
+    __slots__ = ("bits_per_entry", "N")
+
+    def __init__(self, bits_per_entry: float, N: float):
+        self.bits_per_entry = bits_per_entry
+        self.N = N
+
+
+class _PhiLite:
+    __slots__ = ("T", "mfilt_bits", "K")
+
+    def __init__(self, T: float, mfilt_bits: float, K: Tuple[float, ...]):
+        self.T = T
+        self.mfilt_bits = mfilt_bits
+        self.K = np.asarray(K, np.float64)
+
+
+def execute_trial(plan: TrialPlan, trees: Optional[List[TreeBuild]] = None):
+    """Build, populate, and run one shard of the fleet grid.
+
+    Returns ``(results, probes, populate_s, fleet_s)`` with one entry per
+    :class:`TreeBuild` (in input order): the per-session
+    :class:`~repro.lsm.SessionResult` list and the post-trial
+    :class:`TreeProbe`.  Pure numpy end-to-end — both the inline backend
+    and subprocess workers run exactly this function, so sharding cannot
+    change measured I/O."""
+    from repro.lsm import IOStats, LSMTree, draw_keys, populate, run_fleet
+
+    builds = plan.trees if trees is None else trees
+    sys_lite = _SysLite(plan.bits_per_entry, plan.sys_N)
+    t0 = time.time()
+    keys_by_group: Dict[int, np.ndarray] = {}
+    dead_by_group: Dict[int, np.ndarray] = {}
+    engine_trees, keys_list, seed_rows = [], [], []
+    for b in builds:
+        keys = keys_by_group.get(b.key_group)
+        if keys is None:
+            keys = draw_keys(plan.n_keys, seed=b.key_seed,
+                             key_space=plan.key_space)
+            keys_by_group[b.key_group] = keys
+            if plan.delete_fraction > 0:
+                dead_by_group[b.key_group] = \
+                    keys[::int(1 / plan.delete_fraction)]
+        tree = LSMTree.from_phi(_PhiLite(b.T, b.mfilt_bits, b.K), sys_lite,
+                                expected_entries=plan.n_keys,
+                                entry_bytes=plan.entry_bytes,
+                                policy=b.policy,
+                                policy_params=b.policy_params)
+        populate(tree, plan.n_keys, key_space=plan.key_space, keys=keys)
+        if plan.delete_fraction > 0:
+            for k in dead_by_group[b.key_group]:  # seed tombstones
+                tree.delete(int(k))
+            tree.flush()
+            tree.stats = IOStats()      # deletes are setup, not workload
+        engine_trees.append(tree)
+        keys_list.append(keys)
+        seed_rows.append(list(b.session_seeds))
+    populate_s = time.time() - t0
+
+    t0 = time.time()
+    results = run_fleet(engine_trees, np.asarray(plan.sessions, np.float64),
+                        keys_list, n_queries=plan.n_queries,
+                        seeds=np.asarray(seed_rows),
+                        key_space=plan.key_space,
+                        range_fraction=plan.range_fraction,
+                        f_a=plan.f_a, f_seq=plan.f_seq, zipf_a=plan.zipf_a)
+    fleet_s = time.time() - t0
+    probes = [TreeProbe.from_tree(
+        t, dead_by_group.get(b.key_group, np.empty(0))[:plan.probe_dead_keys]
+        if plan.delete_fraction > 0 else None)
+        for t, b in zip(engine_trees, builds)]
+    return results, probes, populate_s, fleet_s
+
+
+def _attach_trial(report: Report, builds: List[TreeBuild], results,
+                  probes) -> None:
+    for b, res, probe in zip(builds, results, probes):
+        report.fleet[(b.cell, b.policy)] = res
+        report.probes[(b.cell, b.policy)] = probe
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+class ExecutionBackend:
+    """The backend protocol: solve one tuning plan, run one fleet trial.
+
+    ``solve`` returns ``{cell: TuningResult}`` for every cell of the plan's
+    (workload x rho [x nominal]) grid; ``run_trial`` fills the report's
+    ``fleet`` / ``probes`` / wall-time fields in place.  Implementations
+    must be *semantics-free*: any backend, on any topology, produces the
+    same tunings and the same measured ``IOStats`` as :class:`InlineBackend`
+    (sharding moves work, never changes it)."""
+
+    name = "abstract"
+
+    def solve(self, plan: TuningPlan) -> Dict[Cell, object]:
+        raise NotImplementedError
+
+    def run_trial(self, plan: TrialPlan, report: Report) -> None:
+        raise NotImplementedError
+
+
+class InlineBackend(ExecutionBackend):
+    """Single-process reference execution (today's vmap path)."""
+
+    name = "inline"
+
+    def __init__(self, **_):
+        pass
+
+    def solve(self, plan: TuningPlan) -> Dict[Cell, object]:
+        from repro.core import tune_nominal_many, tune_robust_many
+        kw = dict(design=plan.design, n_starts=plan.n_starts,
+                  steps=plan.steps, lr=plan.lr, seed=plan.seed)
+        out: Dict[Cell, object] = {}
+        if plan.nominal:
+            for i, r in enumerate(tune_nominal_many(plan.W, plan.sys, **kw)):
+                out[(i, None)] = r
+        if plan.rhos:
+            grid = tune_robust_many(plan.W, list(plan.rhos), plan.sys, **kw)
+            for i, row in enumerate(grid):
+                for j, rho in enumerate(plan.rhos):
+                    out[(i, rho)] = row[j]
+        return out
+
+    def run_trial(self, plan: TrialPlan, report: Report) -> None:
+        results, probes, populate_s, fleet_s = execute_trial(plan)
+        _attach_trial(report, plan.trees, results, probes)
+        report.walls["populate_s"] = populate_s
+        report.walls["fleet_s"] = fleet_s
+
+
+class ShardedBackend(InlineBackend):
+    """Device-sharded tuning: the flattened problem axis is placed across
+    all JAX devices via ``NamedSharding`` before the single-jit solve, so
+    XLA partitions the vmap lanes device-parallel.  Falls back to the
+    inline path (bit-identical results — the lanes are independent either
+    way) when only one device is visible."""
+
+    name = "sharded"
+
+    def solve(self, plan: TuningPlan) -> Dict[Cell, object]:
+        import jax
+        devices = jax.devices()
+        if len(devices) <= 1:
+            return super().solve(plan)
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.core import batch
+        from repro.launch.mesh import make_problem_mesh
+
+        shard = NamedSharding(make_problem_mesh(), PartitionSpec("problem"))
+
+        def solve_flat(W_flat, rho_flat, robust) -> list:
+            P0 = len(W_flat)
+            pad = (-P0) % len(devices)
+            if pad:        # pad with repeats of the last cell, dropped below
+                W_flat = np.concatenate([W_flat, np.repeat(
+                    W_flat[-1:], pad, axis=0)])
+                rho_flat = np.concatenate([rho_flat, np.repeat(
+                    rho_flat[-1:], pad)])
+            W_d = jax.device_put(jnp.asarray(W_flat, jnp.float32), shard)
+            r_d = jax.device_put(jnp.asarray(rho_flat, jnp.float32), shard)
+            out = batch.solve_grid(jax.random.PRNGKey(plan.seed), W_d, r_d,
+                                   plan.design, plan.sys, plan.n_starts,
+                                   plan.steps, plan.lr, robust)
+            out = [np.asarray(x)[:P0] for x in jax.device_get(out)]
+            return batch.build_results(out, plan.design, plan.sys)
+
+        out: Dict[Cell, object] = {}
+        n_w = len(plan.W)
+        if plan.nominal:
+            flat = solve_flat(np.asarray(plan.W, np.float32),
+                              np.zeros(n_w, np.float32), robust=False)
+            out.update({(i, None): r for i, r in enumerate(flat)})
+        if plan.rhos:
+            R = np.asarray(plan.rhos, np.float32)
+            W_flat = np.repeat(np.asarray(plan.W, np.float32),
+                               len(R), axis=0)
+            rho_flat = np.tile(R, n_w)
+            flat = solve_flat(W_flat, rho_flat, robust=True)
+            for i in range(n_w):
+                for j, rho in enumerate(plan.rhos):
+                    out[(i, rho)] = flat[i * len(R) + j]
+        return out
+
+
+def _worker_main() -> None:
+    """Entry point of one fleet-shard worker process.
+
+    Reads a pickled ``(plan, builds)`` job from stdin, runs
+    :func:`execute_trial` on it, and writes the pickled result to stdout.
+    Importing this module pulls no jax — the engine shard is pure numpy —
+    so worker startup is cheap and safe regardless of the parent's device
+    runtime state (no fork-with-threads, no ``__main__`` re-import)."""
+    import pickle
+    import sys
+    plan, builds = pickle.load(sys.stdin.buffer)
+    out = execute_trial(plan, builds)
+    pickle.dump(out, sys.stdout.buffer, protocol=pickle.HIGHEST_PROTOCOL)
+    sys.stdout.buffer.flush()
+
+
+class SubprocessBackend(InlineBackend):
+    """Fleet-trial sharding across worker processes.
+
+    The (tree x session) grid is partitioned by *key group* (trees sharing
+    a key draw — and therefore materialized session plans — stay together),
+    groups are assigned to workers largest-first, and each worker process
+    runs the same :func:`execute_trial` the inline backend runs, on its
+    shard.  Workers are plain ``python -c`` subprocesses fed pickles over
+    stdin/stdout (jax-free: the engine is numpy-only)."""
+
+    name = "subprocess"
+
+    def __init__(self, workers: int = 0, **_):
+        import os
+        self.workers = int(workers) or min(4, os.cpu_count() or 1)
+
+    def run_trial(self, plan: TrialPlan, report: Report) -> None:
+        if self.workers <= 1 or len(plan.trees) <= 1:
+            return super().run_trial(plan, report)
+        import concurrent.futures
+        import os
+        import pickle
+        import subprocess
+        import sys
+
+        # Prefer keeping key groups together (trees sharing a draw also
+        # share materialized session plans): largest-group-first onto the
+        # emptiest shard.  With fewer groups than workers, split within
+        # groups instead — each worker re-draws the (seed-deterministic)
+        # keys, trading one redundant draw for tree-level parallelism.
+        by_group: Dict[int, List[int]] = {}
+        for t, b in enumerate(plan.trees):
+            by_group.setdefault(b.key_group, []).append(t)
+        if len(by_group) >= self.workers:
+            shards: List[List[int]] = [[] for _ in range(self.workers)]
+            for members in sorted(by_group.values(), key=len, reverse=True):
+                min(shards, key=len).extend(members)
+        else:
+            order = list(range(len(plan.trees)))
+            shards = [order[i::self.workers] for i in range(self.workers)]
+        shards = [s for s in shards if s]
+
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(p for p in sys.path if p)
+        cmd = [sys.executable, "-c",
+               "from repro.api.backends import _worker_main; _worker_main()"]
+
+        def run_shard(shard: List[int]):
+            job = pickle.dumps((plan, [plan.trees[t] for t in shard]),
+                               protocol=pickle.HIGHEST_PROTOCOL)
+            proc = subprocess.run(cmd, input=job, stdout=subprocess.PIPE,
+                                  env=env, check=True)
+            return pickle.loads(proc.stdout)
+
+        with concurrent.futures.ThreadPoolExecutor(len(shards)) as pool:
+            outs = list(pool.map(run_shard, shards))
+        populate_s = fleet_s = 0.0
+        for shard, (results, probes, p_s, f_s) in zip(shards, outs):
+            _attach_trial(report, [plan.trees[t] for t in shard],
+                          results, probes)
+            populate_s = max(populate_s, p_s)     # workers run in parallel
+            fleet_s = max(fleet_s, f_s)
+        report.walls["populate_s"] = populate_s
+        report.walls["fleet_s"] = fleet_s
+        report.walls["trial_workers"] = len(shards)
+
+
+BACKENDS = {
+    "inline": InlineBackend,
+    "sharded": ShardedBackend,
+    "subprocess": SubprocessBackend,
+}
+
+
+def get_backend(name: str, params=()):
+    try:
+        cls = BACKENDS[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; "
+                         f"known: {sorted(BACKENDS)}") from None
+    return cls(**dict(params))

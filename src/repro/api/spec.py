@@ -1,0 +1,181 @@
+"""Declarative experiment specs: the paper's pipeline as one frozen value.
+
+An experiment in this codebase is always the same logical object — an
+*uncertain workload* (expected mixes + KL radii), a *design space*
+(continuous Theta plus the engine compaction policy as a discrete arm), and
+optionally a *system trial* that deploys the tunings on the executable LSM
+engine and measures I/O per query.  Before this module every scenario
+re-wired that pipeline by hand (``tune_robust_many`` grids here,
+``run_fleet`` tuples there, per-benchmark ad-hoc dicts everywhere); an
+:class:`ExperimentSpec` states the whole cross-product declaratively and
+:mod:`repro.api.compile` lowers it onto the existing batched engines.
+
+Every spec is a frozen dataclass built from JSON-native scalars and tuples,
+so the full experiment round-trips through JSON (``to_json`` /
+``ExperimentSpec.from_json``) — the contract behind ``benchmarks/run.py
+--spec FILE.json``: new scenarios are data, not new bench scripts.
+
+The execution *backend* is an axis of the spec (``inline`` | ``sharded`` |
+``subprocess``, see :mod:`repro.api.backends`), so the same experiment
+scales from a laptop to a device mesh or a worker pool unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+Pairs = Tuple[Tuple[str, Any], ...]
+
+
+def _tupled(x):
+    """Recursively convert lists (JSON arrays) back to tuples."""
+    if isinstance(x, list):
+        return tuple(_tupled(v) for v in x)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """The uncertain workload: expected mixes plus KL uncertainty radii.
+
+    ``indices`` selects rows of the paper's Table-4
+    :data:`repro.core.EXPECTED_WORKLOADS`; ``workloads`` gives explicit
+    (z0, z1, q, w) mixes instead (exactly one of the two must be set).
+    ``rhos`` are the KL radii of ROBUST TUNING cells (one robust tuning per
+    workload x rho); the rho *source* heuristics
+    (``repro.core.rho_from_pair`` / ``rho_from_history`` /
+    ``rho_from_ranges``) produce values for this field.  ``nominal`` adds
+    the rho-free NOMINAL TUNING baseline per workload.  ``bench_n`` > 0
+    requests model evaluation of every tuning over a sampled benchmark set
+    B (``sample_benchmark(bench_n, bench_seed)``), the Section 8 metric
+    source."""
+
+    indices: Optional[Tuple[int, ...]] = None
+    workloads: Optional[Tuple[Tuple[float, ...], ...]] = None
+    rhos: Tuple[float, ...] = ()
+    nominal: bool = True
+    bench_n: int = 0
+    bench_seed: int = 0
+
+    def __post_init__(self):
+        if (self.indices is None) == (self.workloads is None):
+            raise ValueError("set exactly one of indices / workloads")
+        if not self.rhos and not self.nominal:
+            raise ValueError("no tuning cells: empty rhos and nominal=False")
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignSpec:
+    """The design space: continuous Theta plus policy as a discrete arm.
+
+    ``space`` names a :class:`repro.core.DesignSpace` (the continuous
+    parameterization the tuner optimizes).  ``policies`` are engine
+    compaction-policy arms (:data:`repro.core.ENGINE_POLICIES`): the tuners
+    optimize Theta once per cell and the compiler then scores every arm's
+    *effective* configuration (:func:`repro.core.policy_effective_phi`,
+    the policy's steady-state K profile) under the cell's exact objective,
+    selecting the best arm jointly — the ROADMAP "tune over the policy axis"
+    item.  ``policy_params`` carries per-arm planner constructor kwargs as
+    (policy, ((name, value), ...)) pairs.
+
+    ``fixed`` = (T, filter bits/entry, K) bypasses tuning entirely and
+    deploys that configuration in every cell (the compaction design-space
+    sweeps pin Theta to isolate the policy axis)."""
+
+    space: str = "classic"
+    policies: Tuple[str, ...] = ("klsm",)
+    policy_params: Tuple[Tuple[str, Pairs], ...] = ()
+    n_starts: int = 64
+    steps: int = 250
+    lr: float = 0.25
+    seed: int = 0
+    fixed: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if not self.policies:
+            raise ValueError("at least one policy arm is required")
+        if self.fixed is not None and len(self.fixed) != 3:
+            raise ValueError("fixed must be (T, filt_bits_per_entry, K)")
+
+    def params_for(self, policy: str) -> Pairs:
+        return dict(self.policy_params).get(policy, ())
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialSpec:
+    """The system trial: deploy every (cell, policy) tuning on the
+    executable engine and measure I/O per query over workload sessions.
+
+    Mirrors :func:`repro.lsm.run_policy_fleet`'s conventions exactly (one
+    shared key draw at ``key_seed``, per-session seeds ``session_seeds`` or
+    ``0..S-1``), so a single-arm spec is bit-identical to a direct call.
+    ``per_workload_keys`` switches to the Table-5 convention: each
+    workload's trees share a key draw seeded ``key_seed + widx`` and
+    session seeds ``key_seed + widx + s`` (the nominal/robust pair of a
+    workload then shares materialized session plans).  ``delete_fraction``
+    seeds tombstones after populate (every ``1/fraction``-th key), the
+    tombstone-TTL policies' workload."""
+
+    n_keys: int = 100_000
+    n_queries: int = 2000
+    sessions: Tuple[Tuple[float, ...], ...] = ()
+    key_space: int = 2 ** 48
+    range_fraction: float = 2e-5
+    entry_bytes: int = 64
+    key_seed: int = 7
+    session_seeds: Optional[Tuple[int, ...]] = None
+    per_workload_keys: bool = False
+    delete_fraction: float = 0.0
+    f_a: float = 1.0
+    f_seq: float = 1.0
+    zipf_a: Optional[float] = None
+
+    def __post_init__(self):
+        if not self.sessions:
+            raise ValueError("a trial needs at least one session mix")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """The whole experiment: workload uncertainty x design x trial x backend.
+
+    ``system`` holds :class:`repro.core.LSMSystem` overrides as (name,
+    value) pairs (the reduced-scale Table-5 systems); ``backend`` selects
+    the execution backend (:data:`repro.api.backends.BACKENDS`) and
+    ``backend_params`` its constructor kwargs (e.g. ``(("workers", 4),)``
+    for ``subprocess``)."""
+
+    name: str
+    workload: WorkloadSpec
+    design: DesignSpec = DesignSpec()
+    trial: Optional[TrialSpec] = None
+    system: Pairs = ()
+    backend: str = "inline"
+    backend_params: Pairs = ()
+
+    # -- JSON round-trip ----------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 1)
+        kw.setdefault("sort_keys", True)
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
+        d = dict(d)
+        wl = {k: _tupled(v) for k, v in d.pop("workload").items()}
+        ds = {k: _tupled(v) for k, v in d.pop("design", {}).items()}
+        tr = d.pop("trial", None)
+        return cls(workload=WorkloadSpec(**wl), design=DesignSpec(**ds),
+                   trial=TrialSpec(**{k: _tupled(v) for k, v in tr.items()})
+                   if tr is not None else None,
+                   **{k: _tupled(v) for k, v in d.items()})
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))

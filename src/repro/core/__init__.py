@@ -12,9 +12,10 @@
 - robust_sharding: beyond-paper — same dual applied to mesh/layout selection
 """
 
-from .batch import tune_nominal_many, tune_robust_many
-from .designs import (ENGINE_POLICIES, DesignSpace, describe,
-                      policy_effective_phi, to_phi, to_phi_policy)
+from .batch import (build_results, solve_grid, tune_nominal_many,
+                    tune_robust_many)
+from .designs import (ENGINE_POLICIES, LAZY_LEVELING_FILL, DesignSpace,
+                      describe, policy_effective_phi, to_phi, to_phi_policy)
 from .lsm_cost import (LSMSystem, Phi, cost_vector, expected_cost,
                        leveling_phi, make_phi, num_levels, throughput,
                        tiering_phi)
@@ -33,7 +34,8 @@ __all__ = [
     "make_phi", "leveling_phi", "tiering_phi", "describe", "to_phi",
     "to_phi_policy", "ENGINE_POLICIES", "policy_effective_phi",
     "tune_nominal", "tune_nominal_slsqp", "tune_robust", "tune_robust_slsqp",
-    "tune_nominal_many", "tune_robust_many",
+    "tune_nominal_many", "tune_robust_many", "solve_grid", "build_results",
+    "LAZY_LEVELING_FILL",
     "robust_cost", "dual_solve_cold", "dual_solve_warm",
     "primal_worst_case", "worst_case_workload",
     "kl_divergence", "rho_from_history", "rho_from_pair", "rho_from_ranges",

@@ -150,6 +150,24 @@ def _build_results(out, design: DesignSpace,
     return results
 
 
+def solve_grid(key, W_flat, rho_flat, design: DesignSpace, sys: LSMSystem,
+               n_starts: int, steps: int, lr: float, robust: bool):
+    """Flat-grid entry point for execution backends (repro.api.backends).
+
+    Identical jit program to the ``tune_*_many`` wrappers, but the caller
+    controls the placement of ``W_flat`` (P, 4) / ``rho_flat`` (P,) — e.g.
+    device_put with a NamedSharding over the problem axis shards the vmap
+    lanes across a mesh.  Pair with :func:`build_results` on the output."""
+    return _solve_many(key, W_flat, rho_flat, design, sys, n_starts, steps,
+                       lr, robust=robust)
+
+
+def build_results(out, design: DesignSpace, sys: LSMSystem
+                  ) -> List[TuningResult]:
+    """Public counterpart of the device-output -> TuningResult conversion."""
+    return _build_results(out, design, sys)
+
+
 def _as_workload_matrix(workloads) -> jnp.ndarray:
     W = np.atleast_2d(np.asarray(workloads, np.float32))
     if W.ndim != 2 or W.shape[1] != 4:

@@ -134,7 +134,25 @@ def to_phi_policy(theta: jnp.ndarray, policy: jnp.ndarray, sys: LSMSystem,
 ENGINE_POLICIES = ("klsm", "lazy_leveling", "partial", "tombstone_ttl")
 
 
-def policy_effective_phi(phi: Phi, sys: LSMSystem, policy: str) -> Phi:
+#: Calibrated steady-state fill of lazy leveling's upper levels, as a
+#: fraction of the tiering headroom ``T - 2`` above the 1-run floor:
+#: ``K_upper = 1 + LAZY_LEVELING_FILL * (T - 2)``.  The K = T-1 tiering
+#: *ceiling* assumed upper levels sit at their run cap, but the measured
+#: engine runs far below it — read-triggered squeezes drain the deepest
+#: level, capacity spills empty upper levels wholesale, and read-dominant
+#: sessions add few new runs — so the ceiling overestimated measured cost
+#: ~2x on range-heavy mixes (agreement 0.45 in BENCH_compaction.json).
+#: 0.125 is calibrated against that suite's measured sub-tiering steady
+#: state (250k keys x 10k queries, T=6: ~1-1.6 live runs per upper level,
+#: i.e. K_upper ~= 1.5 = 1 + 0.125 * (T-2)); it lifts the suite's
+#: measured/model agreement to ~0.9 while keeping the policy's signature
+#: (reads cost slightly more than leveling, writes slightly less).  The
+#: regenerated baseline documents the post-calibration agreement.
+LAZY_LEVELING_FILL = 0.125
+
+
+def policy_effective_phi(phi: Phi, sys: LSMSystem, policy: str,
+                         params: tuple = ()) -> Phi:
     """The Phi whose cost vector predicts ``phi`` deployed under an engine
     compaction policy.
 
@@ -143,21 +161,31 @@ def policy_effective_phi(phi: Phi, sys: LSMSystem, policy: str) -> Phi:
 
     * ``klsm`` / ``tombstone_ttl`` — the tuning's own K profile (TTL sweeps
       change *when* deletes are purged, not the steady-state shape);
-    * ``lazy_leveling`` — tiering caps above, a single run at the last
-      level (read pressure keeps the bottom squeezed): ``K_i = T-1`` for
-      ``i < L``, ``K_L = 1``;
+    * ``lazy_leveling`` — a *measured sub-tiering* profile above, a single
+      run at the last level (read pressure keeps the bottom squeezed):
+      ``K_i = 1 + LAZY_LEVELING_FILL * (T-2)`` for ``i < L``, ``K_L = 1``.
+      The previous ``K_i = T-1`` ceiling assumed upper levels pinned at
+      their run cap; the engine's measured steady state sits near the
+      1-run floor (see :data:`LAZY_LEVELING_FILL`), and the ceiling
+      overestimated range-heavy cost ~2x;
     * ``partial`` — the tuning's own K profile (slice-at-a-time granularity
       changes per-trigger latency, not amortized totals: every entry still
       crosses every level once per level of depth).
+
+    ``params`` are the policy's engine constructor kwargs as (name, value)
+    pairs (:class:`repro.api.DesignSpec.policy_params`); a ``fill`` entry
+    overrides :data:`LAZY_LEVELING_FILL` for the lazy profile.
     """
     if policy not in ENGINE_POLICIES:
         raise ValueError(f"unknown engine policy {policy!r}; "
                          f"known: {ENGINE_POLICIES}")
     if policy != "lazy_leveling":
         return phi
+    fill = float(dict(params).get("fill", LAZY_LEVELING_FILL))
     idx = jnp.arange(1, sys.max_levels + 1, dtype=phi.K.dtype)
     L = num_levels(phi.T, mbuf_bits(phi, sys), sys, smooth=False)
-    K = jnp.where(idx == L, 1.0, jnp.maximum(phi.T - 1.0, 1.0))
+    K_up = 1.0 + fill * jnp.maximum(phi.T - 2.0, 0.0)
+    K = jnp.where(idx == L, 1.0, K_up)
     return Phi(T=phi.T, mfilt_bits=phi.mfilt_bits, K=K)
 
 

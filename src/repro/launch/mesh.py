@@ -24,6 +24,17 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     return jax.make_mesh(shape, axes)
 
 
+def make_problem_mesh():
+    """A 1-D mesh over every visible device, axis name ``problem``.
+
+    The sweep-sharding mesh: batched-tuner grids (``core.batch.solve_grid``)
+    flatten the (workload x rho) cross product onto one problem axis, and a
+    ``NamedSharding(mesh, P("problem"))`` on the inputs lets XLA partition
+    the independent vmap lanes device-parallel (see
+    ``repro.api.backends.ShardedBackend``)."""
+    return jax.make_mesh((len(jax.devices()),), ("problem",))
+
+
 def make_host_mesh(model: int = 1):
     """A mesh over however many devices this host actually has."""
     n = len(jax.devices())

@@ -151,6 +151,10 @@ class LSMTree:
         self.planner = make_planner(config)
         self.stats = IOStats()
         self.flush_seq = 0               # logical clock: flushes so far
+        #: intern-table sweep threshold (doubling schedule): the codec table
+        #: is reclaimed when it crosses this, keeping it within 2x the live
+        #: object count.  Int-only workloads never intern and never sweep.
+        self._intern_sweep_at = 64
 
     # -- construction from a tuning -------------------------------------
 
@@ -220,17 +224,23 @@ class LSMTree:
         n = len(keys)
         if len(values) != n:
             raise ValueError(f"put_batch: {n} keys but {len(values)} values")
-        if isinstance(values, np.ndarray) and values.dtype.kind in "iu":
-            enc = self.store.codec.encode_many(values)
-        else:
-            # object dtypes route per-element so TOMBSTONE maps to TOMB
-            enc = np.fromiter((self._encode(v) for v in values), np.int64, n)
+        int_vals = isinstance(values, np.ndarray) and values.dtype.kind in "iu"
         i = 0
         while i < n:
             room = max(1, self.cfg.buf_entries - len(self.buffer))
             chunk = keys[i:i + room]
-            self.buffer.update(zip(chunk.tolist(),
-                                   enc[i:i + room].tolist()))
+            vals = values[i:i + room]
+            # Encode per chunk, never ahead of insertion: a flush at a chunk
+            # boundary may run the intern-table sweep, which only sees slots
+            # already in the buffer/arenas — pre-encoded pending values
+            # would be swept as dead and their slot ids dangle.
+            if int_vals:
+                enc = self.store.codec.encode_many(vals)
+            else:
+                # object dtypes route per-element so TOMBSTONE maps to TOMB
+                enc = np.fromiter((self._encode(v) for v in vals), np.int64,
+                                  len(chunk))
+            self.buffer.update(zip(chunk.tolist(), enc.tolist()))
             self.stats.queries["w"] += len(chunk)
             i += len(chunk)
             if len(self.buffer) >= self.cfg.buf_entries:
@@ -251,6 +261,11 @@ class LSMTree:
         self.buffer.clear()
         self._push_run(1, run)
         self._maintain()
+        # Compaction-time intern reclamation: the buffer is empty here, so
+        # every live interned slot is visible in the level arenas.
+        if len(self.store.codec.objects) >= self._intern_sweep_at:
+            self.store.reclaim_interned()
+            self._intern_sweep_at = max(64, 2 * len(self.store.codec.objects))
 
     def _push_run(self, level: int, run: RunData) -> None:
         """Plan-execute-replan until the incoming run finds a home."""

@@ -258,6 +258,43 @@ class RunStore:
     def filter_bits_in_use(self) -> int:
         return sum(sum(lv.n_bits) for lv in self.levels)
 
+    # -- intern-table reclamation -------------------------------------------
+
+    def reclaim_interned(self) -> int:
+        """Compaction-time intern-table sweep: drop dead slots, remap live.
+
+        The codec's intern table is append-only between sweeps — merges that
+        drop an overwritten or tombstoned object value leave its slot behind
+        — so a long-lived object-valued tree (e.g. a checkpoint-manifest
+        store under churn) would hold every value version it ever saw.  This
+        sweep scans the level arenas for live interned encodings (even,
+        >= 0; inline ints are odd and ``TOMB`` is negative), compacts the
+        object table down to the live slots, and rewrites the arenas'
+        encodings in place with one vectorized gather per level.
+
+        Must run while the write buffer is empty (the engine sweeps at the
+        end of a flush): buffered encodings are not scanned or remapped.
+        Returns the number of slots dropped (0 for int-only trees, which
+        never intern and never pay for the scan)."""
+        codec = self.codec
+        n_old = len(codec.objects)
+        if n_old == 0:
+            return 0
+        live = np.zeros(n_old, bool)
+        for lv in self.levels:
+            iv = lv.vals[(lv.vals >= 0) & (lv.vals & 1 == 0)]
+            live[iv >> 1] = True
+        n_live = int(live.sum())
+        if n_live == n_old:
+            return 0
+        remap = np.cumsum(live) - 1            # old slot -> new slot
+        codec.objects = [codec.objects[i] for i in np.flatnonzero(live)]
+        for lv in self.levels:
+            m = (lv.vals >= 0) & (lv.vals & 1 == 0)
+            if m.any():
+                lv.vals[m] = 2 * remap[lv.vals[m] >> 1]
+        return n_old - n_live
+
     # -- plan execution ------------------------------------------------------
 
     def place_run(self, level: int, run: RunData) -> None:

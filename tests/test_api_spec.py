@@ -1,0 +1,205 @@
+"""Tests for the unified experiment API (repro.api).
+
+The facade's contract is *zero semantic surface*: a spec lowered through
+``compile.py`` + any backend must produce bit-identical tunings and
+``IOStats`` to hand-wiring the same experiment on the low-level layer
+(``tune_nominal_many`` / ``tune_robust_many`` + ``run_policy_fleet``).
+These tests pin that contract on a small grid for the inline and
+sharded-fallback backends (single device -> the sharded backend must take
+the inline path), plus the subprocess fleet backend, the spec <-> JSON
+round-trip, and the joint policy-arm selection.
+
+Deliberately hypothesis-free; solver sizes are small so the file runs in
+about a minute on CPU.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (DesignSpec, ExperimentSpec, TrialSpec, WorkloadSpec,
+                       run_experiment)
+from repro.core import EXPECTED_WORKLOADS, LSMSystem, tune_nominal_many, \
+    tune_robust_many
+from repro.lsm import run_policy_fleet
+
+SMALL = dict(n_starts=8, steps=60, seed=3)
+RHOS = (0.25, 1.0)
+WIDX = (7, 11)
+SYS_PAIRS = (("N", 8000.0), ("entry_bits", 512.0), ("bits_per_entry", 6.0),
+             ("min_buf_bits", 512.0 * 64), ("max_T", 20.0))
+SESSIONS = ((0.05, 0.85, 0.05, 0.05), (0.05, 0.05, 0.05, 0.85))
+
+
+def _spec(**kw) -> ExperimentSpec:
+    base = dict(
+        name="t",
+        workload=WorkloadSpec(indices=WIDX, rhos=RHOS, nominal=True),
+        design=DesignSpec(**SMALL),
+        system=SYS_PAIRS,
+    )
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def _assert_same_tuning(a, b):
+    assert float(a.phi.T) == float(b.phi.T)
+    assert np.array_equal(np.asarray(a.phi.K), np.asarray(b.phi.K))
+    assert float(a.phi.mfilt_bits) == float(b.phi.mfilt_bits)
+    assert a.cost == b.cost
+    assert a.design is b.design
+
+
+# ---------------------------------------------------------------------------
+# Spec <-> JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_spec_json_round_trip():
+    spec = _spec(
+        trial=TrialSpec(n_keys=5000, n_queries=300, sessions=SESSIONS,
+                        key_space=2 ** 22, session_seeds=(4, 5)),
+        design=DesignSpec(policies=("klsm", "lazy_leveling"),
+                          policy_params=(
+                              ("lazy_leveling", (("read_trigger", 64),)),),
+                          **SMALL),
+        backend="subprocess", backend_params=(("workers", 2),))
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back == spec
+    # frozen dataclasses: equal means field-for-field equal, incl. nesting
+    assert back.trial.sessions == spec.trial.sessions
+    assert back.design.params_for("lazy_leveling") == (("read_trigger", 64),)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        WorkloadSpec(indices=(1,), workloads=((0.25,) * 4,))
+    with pytest.raises(ValueError):
+        WorkloadSpec(indices=(1,), rhos=(), nominal=False)
+    with pytest.raises(ValueError):
+        DesignSpec(policies=())
+    with pytest.raises(ValueError):
+        TrialSpec(sessions=())
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity vs the direct low-level calls
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def direct():
+    sys_small = LSMSystem().replace(**dict(SYS_PAIRS))
+    W = EXPECTED_WORKLOADS[list(WIDX)]
+    nominal = tune_nominal_many(W, sys_small, **SMALL)
+    robust = tune_robust_many(W, list(RHOS), sys_small, **SMALL)
+    return sys_small, nominal, robust
+
+
+@pytest.mark.parametrize("backend", ["inline", "sharded"])
+def test_tunings_bit_identical_to_direct(direct, backend):
+    """Facade tunings == direct tune_*_many, inline AND sharded fallback
+    (this host has one device, so `sharded` must take the inline path)."""
+    _, nominal, robust = direct
+    report = run_experiment(_spec(backend=backend))
+    for i in range(len(WIDX)):
+        _assert_same_tuning(report.tuning((i, None)), nominal[i])
+        for j, rho in enumerate(RHOS):
+            _assert_same_tuning(report.tuning((i, rho)), robust[i][j])
+
+
+def test_trial_bit_identical_to_run_policy_fleet(direct):
+    """Facade fleet IOStats == a direct run_policy_fleet on the same phis
+    (same key draw, same session seeds, same tree order)."""
+    sys_small, _, robust = direct
+    spec = _spec(
+        workload=WorkloadSpec(indices=WIDX, rhos=(1.0,), nominal=False),
+        trial=TrialSpec(n_keys=5000, n_queries=300, sessions=SESSIONS,
+                        key_space=2 ** 22, range_fraction=1e-3, key_seed=7))
+    report = run_experiment(spec)
+    phis = [robust[i][1].phi for i in range(len(WIDX))]  # rho=1.0 column
+    _, results = run_policy_fleet(
+        phis, sys_small, ["klsm"], np.asarray(SESSIONS), n_keys=5000,
+        n_queries=300, seed=7, key_space=2 ** 22, range_fraction=1e-3)
+    for i in range(len(WIDX)):
+        facade = report.fleet[((i, 1.0), "klsm")]
+        for s, direct_res in enumerate(results[i][0]):
+            assert facade[s].io == direct_res.io
+            assert facade[s].avg_io_per_query == direct_res.avg_io_per_query
+
+
+def test_subprocess_backend_matches_inline():
+    spec = _spec(
+        workload=WorkloadSpec(indices=WIDX, rhos=(1.0,), nominal=False),
+        trial=TrialSpec(n_keys=5000, n_queries=300, sessions=SESSIONS,
+                        key_space=2 ** 22, per_workload_keys=True))
+    inline = run_experiment(spec)
+    sub = run_experiment(dataclasses.replace(
+        spec, backend="subprocess", backend_params=(("workers", 2),)))
+    assert set(sub.fleet) == set(inline.fleet)
+    for key in inline.fleet:
+        for a, b in zip(inline.fleet[key], sub.fleet[key]):
+            assert a.io == b.io
+    assert sub.walls["trial_workers"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Joint policy-arm selection + report surface
+# ---------------------------------------------------------------------------
+
+def test_policy_arm_selection_is_joint():
+    """Write-heavy cells pick the lazy arm, read-heavy cells the leveled
+    K-LSM arm, under the same spec — the discrete axis is optimized per
+    cell, not globally."""
+    spec = ExperimentSpec(
+        name="arms",
+        workload=WorkloadSpec(indices=(4, 11), rhos=(1.0,), nominal=False),
+        design=DesignSpec(policies=("klsm", "lazy_leveling"), **SMALL))
+    report = run_experiment(spec)
+    assert report.chosen[(0, 1.0)] == "lazy_leveling"   # w4: write-heavy
+    assert report.chosen[(1, 1.0)] == "klsm"            # w11: read-mixed
+    for cell in report.cells:
+        costs = report.arm_costs[cell]
+        assert costs[report.chosen[cell]] == min(costs.values())
+
+
+def test_single_arm_spec_chooses_primary():
+    report = run_experiment(_spec())
+    assert all(report.chosen[c] == "klsm" for c in report.cells)
+
+
+def test_report_bench_payload_schema():
+    """The report serializes in exactly the BENCH_<suite>.json shape the
+    perf gate consumes."""
+    spec = _spec(workload=WorkloadSpec(indices=(7,), rhos=(1.0,),
+                                       nominal=True, bench_n=200))
+    report = run_experiment(spec)
+    payload = report.to_bench_payload()
+    assert set(payload) == {"suite", "wall_time_s", "error", "rows"}
+    assert payload["suite"] == "t"
+    assert payload["error"] is None
+    for row in payload["rows"]:
+        assert set(row) == {"name", "us_per_call", "derived"}
+    import json
+    json.dumps(payload, allow_nan=False)     # strict-JSON clean
+    # delta-throughput metric surface
+    d = report.delta_tp_vs_nominal(0, 1.0)
+    assert d.shape == (200,)
+    assert np.isfinite(d).all()
+
+
+def test_fixed_design_skips_tuning():
+    spec = ExperimentSpec(
+        name="fixed",
+        workload=WorkloadSpec(workloads=((0.25, 0.25, 0.25, 0.25),),
+                              rhos=(), nominal=True),
+        design=DesignSpec(fixed=(6.0, 4.0, 1.0),
+                          policies=("klsm", "lazy_leveling")),
+        system=SYS_PAIRS)
+    report = run_experiment(spec)
+    assert report.walls["tuning_s"] == pytest.approx(0.0, abs=0.05)
+    r = report.tuning((0, None), "klsm")
+    assert float(r.phi.T) == 6.0
+    assert r.solver == "fixed"
+    # the lazy arm's effective profile differs -> different model cost
+    mc = report.model_costs[(0, None)]
+    assert not np.allclose(mc["klsm"], mc["lazy_leveling"])

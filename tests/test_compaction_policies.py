@@ -14,7 +14,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import (LSMSystem, make_phi, num_levels,
+from repro.core import (LAZY_LEVELING_FILL, LSMSystem, make_phi, num_levels,
                         policy_effective_phi)
 from repro.core.lsm_cost import mbuf_bits
 from repro.lsm import (EngineConfig, IOStats, LSMTree, MergePlan, POLICIES,
@@ -290,7 +290,14 @@ def test_policy_effective_phi_profiles():
     L = int(num_levels(phi.T, mbuf_bits(phi, sys), sys))
     K = np.asarray(lazy.K)
     assert K[L - 1] == 1.0
-    assert np.all(K[: L - 1] == 4.0)           # T - 1
+    # calibrated sub-tiering steady state, not the K = T-1 ceiling
+    k_up = 1.0 + LAZY_LEVELING_FILL * (5.0 - 2.0)
+    assert np.allclose(K[: L - 1], k_up)
+    assert np.all(K[: L - 1] < 4.0)            # strictly below the ceiling
+    # a model-side fill override restores any profile, incl. the ceiling
+    ceiling = policy_effective_phi(phi, sys, "lazy_leveling",
+                                   (("fill", 1.0),))
+    assert np.all(np.asarray(ceiling.K)[: L - 1] == 4.0)
     for pol in ("klsm", "partial", "tombstone_ttl"):
         assert policy_effective_phi(phi, sys, pol) is phi
     with pytest.raises(ValueError, match="unknown engine policy"):

@@ -177,3 +177,51 @@ def test_empty_queries_cheaper_than_nonempty():
                        n_queries=1500, seed=4)
     assert r_z0.avg_io_per_query < r_z1.avg_io_per_query
     assert r_z1.avg_io_per_query >= 0.9  # a hit costs ~1 page I/O
+
+
+# ---------------------------------------------------------------------------
+# Intern-table reclamation
+# ---------------------------------------------------------------------------
+
+def test_intern_table_bounded_under_churn():
+    """A churn workload overwriting object values must not grow the codec's
+    intern table without bound: compaction-time sweeps remap live slots and
+    drop dead ones (the engine's doubling-threshold trigger keeps the table
+    within ~2x the live object count)."""
+    tree = _mk(T=4, K=(1,), buf=64, n=4000)
+    keys = list(range(150))
+    rounds = 50
+    for round_ in range(rounds):
+        for k in keys:
+            tree.put(k, f"v{round_}_{k}")
+    tree.flush()
+    table = len(tree.store.codec.objects)
+    assert table <= max(64, 4 * len(keys)), (
+        f"intern table grew to {table} after {rounds * len(keys)} object "
+        "writes over 150 live keys")
+    # the sweep remapped, not clobbered: newest version of every key decodes
+    for k in (0, 73, 149):
+        assert tree.get(k) == f"v{rounds - 1}_{k}"
+
+
+def test_intern_reclaim_preserves_tombstones_and_ints():
+    """The sweep must leave inline ints and TOMB encodings untouched and
+    keep deletes dead."""
+    tree = _mk(T=3, K=(1,), buf=32, n=2000)
+    for i in range(64):
+        tree.put(i, i * 10)                 # inline ints: never interned
+    for round_ in range(20):
+        for i in range(64, 96):
+            tree.put(i, f"obj{round_}_{i}")  # churning interned objects
+    for i in range(0, 64, 2):
+        tree.delete(i)
+    tree.flush()
+    dropped = tree.store.reclaim_interned()  # force a final sweep
+    assert dropped >= 0
+    assert len(tree.store.codec.objects) <= 96
+    for i in range(0, 64, 2):
+        assert tree.get(i) is None           # deletes stay dead
+    for i in range(1, 64, 2):
+        assert tree.get(i) == i * 10         # ints untouched
+    for i in range(64, 96):
+        assert tree.get(i) == f"obj19_{i}"   # newest objects survive remap
