@@ -1,0 +1,134 @@
+"""Online drift: the paper's robustness claim, reproduced *dynamically*.
+
+ENDURE argues a robust tuning protects against executed workloads that
+drift from the expected one; the :mod:`repro.online` subsystem closes the
+loop by observing the drift and re-tuning.  This suite replays three drift
+scenarios on the executable engine at 250k keys x 10k queries per
+deployment and measures four arms per scenario:
+
+* ``stale_nominal`` — tuned once for the expected mix, never re-tuned
+  (the static-input baseline the rest of the repo assumes);
+* ``static_robust`` — ENDURE's answer: one robust tuning whose rho comes
+  from the observed history (``rho_source="from_history"``), never
+  re-tuned;
+* ``online`` — starts from the same robust tuning, then runs the
+  observe -> estimate -> re-tune loop (KL drift triggers, storm-batched
+  ``tune_robust_many`` re-tunes, tuning swaps at flush boundaries whose
+  transition compaction is charged to the workload);
+* ``oracle`` — re-tuned every segment to the true upcoming mix: the
+  adaptation upper bound.
+
+Scenarios: *gradual* rotation (write-heavy w4 ramps to the read-trimodal
+w11), *abrupt flip* (w7 switches to non-empty-read-heavy mid-run), and
+*cyclic* alternation (w4 <-> w11 every segment).  All arms of a scenario
+share the key population and the per-segment session plans, so throughput
+differences are tuning differences.
+
+Claims gated by ``--check`` (see ``CHECK_METRICS['online']``): on every
+scenario online-adaptive >= static-robust >= stale-nominal in throughput,
+and online-adaptive recovers >= 80% of the oracle.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.api import (DesignSpec, DriftSpec, ExperimentSpec, Row,
+                       WorkloadSpec, run_experiment)
+from repro.core import EXPECTED_WORKLOADS
+
+N_KEYS = 250_000
+SEGMENTS = 10
+SEG_QUERIES = 1_000          # x SEGMENTS = 10k queries per deployment
+KEY_SPACE = 2 ** 26          # tab5 conventions: dense keyspace, short ranges
+RANGE_FRACTION = 1e-3
+BITS_PER_ENTRY = 6.0
+MAX_T = 30
+
+#: (drift kind, expected workload index, drift target mix).  The expected
+#: workload is write-heavy w4: its nominal tuning is write-optimized, so
+#: drift toward the *expensive* read classes — the direction the KL worst
+#: case tilts, i.e. what the robust hedge anticipates — is exactly where a
+#: stale tuning bleeds.  (Drift toward cheap classes, e.g. z0-heavy, makes
+#: every tuning faster and rewards nobody; see docs/online.md.)
+SCENARIOS = (
+    ("gradual", 4, (0.33, 0.33, 0.33, 0.01)),
+    ("flip", 4, (0.475, 0.475, 0.04, 0.01)),
+    ("cyclic", 4, (0.33, 0.33, 0.33, 0.01)),
+)
+
+SYSTEM = (("N", float(N_KEYS)), ("entry_bits", 64.0 * 8),
+          ("page_bits", 4096.0 * 8), ("bits_per_entry", BITS_PER_ENTRY),
+          ("min_buf_bits", 64.0 * 8 * 64), ("s_rq", 2e-5),
+          ("max_T", float(MAX_T)))
+
+
+def make_spec(kind: str, widx: int, target, n_keys: int = N_KEYS,
+              segments: int = SEGMENTS,
+              seg_queries: int = SEG_QUERIES) -> ExperimentSpec:
+    expected = tuple(float(x) for x in EXPECTED_WORKLOADS[widx])
+    return ExperimentSpec(
+        name=f"online_{kind}",
+        workload=WorkloadSpec(indices=(widx,), nominal=True,
+                              rho_source="from_history",
+                              history=(expected, tuple(target))),
+        design=DesignSpec(seed=0),
+        drift=DriftSpec(kind=kind, segments=segments, n_queries=seg_queries,
+                        target=tuple(target), n_keys=n_keys,
+                        key_space=KEY_SPACE, range_fraction=RANGE_FRACTION,
+                        key_seed=100, estimator="window", window=4,
+                        capacity=64, kl_threshold=0.2, budget_slack=1.0,
+                        min_windows=2, cooldown=2,
+                        retune_starts=32, retune_steps=200),
+        system=SYSTEM)
+
+
+def run(n_keys: int = N_KEYS, segments: int = SEGMENTS,
+        seg_queries: int = SEG_QUERIES) -> List[Row]:
+    rows: List[Row] = []
+    recoveries = []
+    orderings = []
+    drift_s = tuning_s = 0.0
+    for kind, widx, target in SCENARIOS:
+        report = run_experiment(make_spec(kind, widx, target, n_keys,
+                                          segments, seg_queries))
+        res = {arm: report.drift[(0, arm)]
+               for arm in ("stale_nominal", "static_robust", "online",
+                           "oracle")}
+        tp = {arm: r.throughput for arm, r in res.items()}
+        recovery = tp["online"] / tp["oracle"]
+        ordered = (tp["online"] >= tp["static_robust"] * 0.999
+                   and tp["static_robust"] >= tp["stale_nominal"] * 0.999)
+        recoveries.append(recovery)
+        orderings.append(ordered)
+        drift_s += report.walls["drift_s"]
+        tuning_s += report.walls["tuning_s"]
+        rho0 = report.cells[-1][1]
+        rows.append(Row(
+            f"online_{kind}", 0.0,
+            tp_stale_nominal=round(tp["stale_nominal"], 4),
+            tp_static_robust=round(tp["static_robust"], 4),
+            tp_online=round(tp["online"], 4),
+            tp_oracle=round(tp["oracle"], 4),
+            online_retunes=res["online"].retunes,
+            online_recovery=round(recovery, 3),
+            claim_adaptive_ordering=ordered,
+            rho_from_history=round(float(rho0), 3),
+            segment_io_online=[round(r.avg_io_per_query, 3)
+                               for r in res["online"].records],
+            segment_io_stale=[round(r.avg_io_per_query, 3)
+                              for r in res["stale_nominal"].records],
+        ))
+    rows.append(Row(
+        "online_fleet", drift_s * 1e6,
+        n_keys=n_keys, segments=segments, seg_queries=seg_queries,
+        scenarios=len(SCENARIOS), arms=4,
+        tuning_s=round(tuning_s, 2), engine_s=round(drift_s, 2),
+    ))
+    rows.append(Row(
+        "online_summary", 0.0,
+        claim_online_ge_robust_ge_stale=all(orderings),
+        claim_online_recovers_oracle=min(recoveries) >= 0.8,
+        online_recovery_min=round(min(recoveries), 3),
+    ))
+    return rows

@@ -25,7 +25,9 @@ curated directional metrics in ``CHECK_METRICS`` must stay within
 Exit codes are distinct so CI can tell the failure modes apart: 1 for a
 perf regression (or a crashed suite), 2 for a *misconfigured* gate — a
 checked suite with no committed baseline (a new suite must commit its
-``BENCH_<suite>.json`` before the gate can watch it) or a filter that
+``BENCH_<suite>.json`` before the gate can watch it), a committed baseline
+that parses as JSON but lacks the suite's ``CHECK_METRICS`` rows/keys
+(e.g. stale, or committed before a metric was added), or a filter that
 selects no suite at all (a typo would otherwise pass vacuously).
 
 ``--list`` prints the suite names one per line (for CI job matrices) and
@@ -56,6 +58,12 @@ CHECK_METRICS = {
     "api": {
         "api_fleet.engine_s": "lower",
     },
+    "online": {
+        "online_fleet.engine_s": "lower",
+        "online_summary.online_recovery_min": "higher",
+        # bool (int subclass): flipping to False reads as 0 < 1/tol
+        "online_summary.claim_online_ge_robust_ge_stale": "higher",
+    },
 }
 
 #: --check exit codes: regression vs misconfiguration (missing baseline /
@@ -79,6 +87,7 @@ SUITE_MODULES = [
     ("robust_sharding", "bench_robust_sharding"),
     ("compaction", "bench_compaction_space"),
     ("api", "bench_api"),
+    ("online", "bench_online_drift"),
 ]
 
 
@@ -98,10 +107,19 @@ def _load_baselines(suites, baseline_dir):
 def _check_suite(key, rows, wall, base, tol):
     """Compare one executed suite against its committed baseline.
 
-    Returns a list of human-readable regression strings (empty = pass).
-    A missing baseline is NOT a regression — the caller reports it
-    separately and exits with EXIT_MISCONFIGURED."""
+    Returns ``(regressions, misconfigured)`` — two lists of human-readable
+    strings (both empty = pass).  A *misconfigured* gate (a committed
+    baseline that parses as JSON but is not the BENCH schema, or is missing
+    the CHECK_METRICS rows/keys for its suite — e.g. a stale baseline
+    committed before a metric was added) is reported separately so the
+    caller exits EXIT_MISCONFIGURED instead of crashing or reporting a
+    phantom regression; a metric missing from the *run* is a real
+    regression (the suite stopped producing it)."""
     regressions = []
+    misconfigured = []
+    if not isinstance(base, dict):
+        return [], [f"BENCH_{key}.json: baseline is "
+                    f"{type(base).__name__}, not a BENCH schema object"]
 
     def compare(label, measured, reference, direction, slack=1.0):
         if not isinstance(measured, (int, float)) or \
@@ -122,18 +140,27 @@ def _check_suite(key, rows, wall, base, tol):
     compare(f"{key}.wall_time_s", wall, base.get("wall_time_s"), "lower",
             slack=2.0)
     derived_by_row = {r.name: r.derived for r in rows}
-    base_by_row = {r["name"]: r.get("derived", {})
-                   for r in base.get("rows", [])}
+    base_rows = base.get("rows")
+    if not isinstance(base_rows, list):
+        base_rows = []
+        misconfigured.append(f"BENCH_{key}.json: no 'rows' list")
+    base_by_row = {r["name"]: r.get("derived") or {}
+                   for r in base_rows
+                   if isinstance(r, dict) and "name" in r}
     for spec, direction in CHECK_METRICS.get(key, {}).items():
         row_name, metric = spec.rsplit(".", 1)
         measured = derived_by_row.get(row_name, {}).get(metric)
         reference = base_by_row.get(row_name, {}).get(metric)
-        if measured is None or reference is None:
-            regressions.append(f"{spec}: missing "
-                               f"({'run' if measured is None else 'baseline'})")
+        if reference is None:
+            misconfigured.append(
+                f"{spec}: missing from BENCH_{key}.json (regenerate the "
+                "baseline with --json and commit it)")
+            continue
+        if measured is None:
+            regressions.append(f"{spec}: missing (run)")
             continue
         compare(spec, float(measured), float(reference), direction)
-    return regressions
+    return regressions, misconfigured
 
 
 def _jsonable(x):
@@ -218,6 +245,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     all_regressions = []
+    all_misconfigured = []
     missing_baselines = []
     for key, mod in selected:
         t0 = time.time()
@@ -252,8 +280,10 @@ def main() -> None:
             if base is None:
                 missing_baselines.append(key)
             else:
-                all_regressions += _check_suite(key, rows, wall, base,
-                                                args.tolerance)
+                regs, miscfg = _check_suite(key, rows, wall, base,
+                                            args.tolerance)
+                all_regressions += regs
+                all_misconfigured += miscfg
     if failures:
         raise SystemExit(f"{failures} benchmark suites failed")
     if args.check:
@@ -261,6 +291,10 @@ def main() -> None:
             print("error: no committed baseline for: "
                   + ", ".join(f"BENCH_{k}.json" for k in missing_baselines)
                   + " (generate with --json and commit before gating)")
+            raise SystemExit(EXIT_MISCONFIGURED)
+        if all_misconfigured:
+            print("error: misconfigured perf gate:\n  "
+                  + "\n  ".join(all_misconfigured))
             raise SystemExit(EXIT_MISCONFIGURED)
         if all_regressions:
             raise SystemExit("perf regressions vs committed baselines:\n  "

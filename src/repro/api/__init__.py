@@ -24,20 +24,22 @@ from __future__ import annotations
 import time
 
 from .backends import (BACKENDS, ExecutionBackend, InlineBackend,
-                       ShardedBackend, SubprocessBackend, execute_trial,
-                       get_backend)
-from .compile import (CompiledExperiment, TrialPlan, TuningPlan,
-                      compile_spec)
+                       RemoteBackend, ShardedBackend, SubprocessBackend,
+                       execute_trial, get_backend)
+from .compile import (CompiledExperiment, DriftPlan, TrialPlan, TuningPlan,
+                      compile_spec, drift_schedule)
 from .report import (Report, Row, TreeProbe, costs_over_benchmark, delta_tp,
                      fmt, jsonable, timed)
-from .spec import DesignSpec, ExperimentSpec, TrialSpec, WorkloadSpec
+from .spec import (DesignSpec, DriftSpec, ExperimentSpec, TrialSpec,
+                   WorkloadSpec)
 
 __all__ = [
-    "ExperimentSpec", "WorkloadSpec", "DesignSpec", "TrialSpec",
+    "ExperimentSpec", "WorkloadSpec", "DesignSpec", "TrialSpec", "DriftSpec",
     "Report", "Row", "TreeProbe", "run_experiment",
     "compile_spec", "CompiledExperiment", "TuningPlan", "TrialPlan",
+    "DriftPlan", "drift_schedule",
     "BACKENDS", "ExecutionBackend", "InlineBackend", "ShardedBackend",
-    "SubprocessBackend", "get_backend", "execute_trial",
+    "SubprocessBackend", "RemoteBackend", "get_backend", "execute_trial",
     "costs_over_benchmark", "delta_tp", "timed", "fmt", "jsonable",
 ]
 
@@ -66,4 +68,7 @@ def run_experiment(spec: ExperimentSpec, backend=None) -> Report:
     trial = cx.build_trial(report)
     if trial is not None:
         backend.run_trial(trial, report)
+    drift = cx.build_drift(report)
+    if drift is not None:
+        backend.run_drift(drift, report)
     return report

@@ -144,6 +144,19 @@ class ExecutionBackend:
     def run_trial(self, plan: TrialPlan, report: Report) -> None:
         raise NotImplementedError
 
+    def run_drift(self, plan, report: Report) -> None:
+        """Run a compiled drift experiment (``repro.api.compile.DriftPlan``).
+
+        One shared implementation: the online loop is a feedback system —
+        segment s+1's tunings depend on what segment s observed — so it is
+        inherently sequential per deployment and every backend runs the
+        same inline driver (re-tune storms inside it are still one batched
+        dispatch across the whole fleet)."""
+        from repro.online import execute_drift
+        t0 = time.time()
+        report.drift.update(execute_drift(plan))
+        report.walls["drift_s"] = time.time() - t0
+
 
 class InlineBackend(ExecutionBackend):
     """Single-process reference execution (today's vmap path)."""
@@ -313,10 +326,48 @@ class SubprocessBackend(InlineBackend):
         report.walls["trial_workers"] = len(shards)
 
 
+class RemoteBackend(ExecutionBackend):
+    """Cluster-scheduler stub (the ROADMAP "remote backend" item).
+
+    Registered so ``ExperimentSpec.backend = "remote"`` round-trips through
+    JSON and ``get_backend`` like any real backend, and so the submission
+    payload contract is pinned today: :meth:`serialize_job` is the
+    spec-serializing half (the JSON a scheduler shim would ship to a worker
+    that runs ``benchmarks/run.py --spec job.json``).  Execution itself is
+    NOT implemented — every execution entry point raises with instructions
+    rather than silently running locally, so a misconfigured deployment
+    cannot masquerade as a cluster run."""
+
+    name = "remote"
+    _MSG = ("the 'remote' backend is a scheduling stub: it serializes the "
+            "experiment (RemoteBackend.serialize_job(spec) -> JSON for "
+            "`benchmarks/run.py --spec`) but cannot execute it in this "
+            "process.  Submit the payload to your cluster scheduler, or "
+            "pick backend='inline'/'sharded'/'subprocess' to run here.")
+
+    def __init__(self, scheduler: str = "", queue: str = "", **_):
+        self.scheduler = scheduler
+        self.queue = queue
+
+    def serialize_job(self, spec) -> str:
+        """The submission payload: exactly the spec's JSON round-trip."""
+        return spec.to_json()
+
+    def solve(self, plan: TuningPlan) -> Dict[Cell, object]:
+        raise NotImplementedError(self._MSG)
+
+    def run_trial(self, plan: TrialPlan, report: Report) -> None:
+        raise NotImplementedError(self._MSG)
+
+    def run_drift(self, plan, report: Report) -> None:
+        raise NotImplementedError(self._MSG)
+
+
 BACKENDS = {
     "inline": InlineBackend,
     "sharded": ShardedBackend,
     "subprocess": SubprocessBackend,
+    "remote": RemoteBackend,
 }
 
 

@@ -76,6 +76,55 @@ class TreeBuild:
 
 
 @dataclasses.dataclass
+class DriftArmInit:
+    """One drift-experiment deployment: its workload, arm kind, and the
+    tuning it starts from (``None`` for oracle — pre-tuned per segment)."""
+
+    widx: int
+    arm: str
+    tuning: object                   # TuningResult; None for oracle
+    rho: float                       # live budget of the initial tuning
+    policy: str
+    policy_params: Pairs
+
+
+@dataclasses.dataclass
+class DriftPlan:
+    """A compiled drift experiment (:class:`repro.api.spec.DriftSpec`):
+    per-workload expected mixes + true-mix schedules, one arm list, and the
+    live system for re-tune storms.  Executed by
+    :func:`repro.online.execute_drift` (inherently sequential — the loop is
+    a feedback system — so every backend shares the inline driver)."""
+
+    arms: List[DriftArmInit]
+    expected: np.ndarray             # (n_w, 4)
+    schedules: np.ndarray            # (n_w, S, 4)
+    drift: object                    # the DriftSpec
+    sys: object                      # repro.core.LSMSystem
+    design: object = None            # DesignSpace re-tunes solve in
+
+
+def drift_schedule(expected: np.ndarray, drift) -> np.ndarray:
+    """Materialize a drift spec's per-segment true mixes, (S, 4)."""
+    S = int(drift.segments)
+    w0 = np.asarray(expected, np.float64)
+    w0 = w0 / w0.sum()
+    if drift.kind == "schedule":
+        sched = np.asarray(drift.schedule, np.float64)
+        return sched / sched.sum(axis=1, keepdims=True)
+    w1 = np.asarray(drift.target, np.float64)
+    w1 = w1 / w1.sum()
+    if drift.kind == "gradual":
+        t = np.arange(S, dtype=np.float64) / max(S - 1, 1)
+    elif drift.kind == "flip":
+        t = (np.arange(S) >= S / 2).astype(np.float64)
+    else:                                        # cyclic
+        t = (np.arange(S) % 2).astype(np.float64)
+    sched = (1.0 - t)[:, None] * w0 + t[:, None] * w1
+    return sched / sched.sum(axis=1, keepdims=True)
+
+
+@dataclasses.dataclass
 class TrialPlan:
     """The flat fleet grid plus everything needed to run it jax-free."""
 
@@ -127,7 +176,7 @@ class CompiledExperiment:
 
     def __init__(self, spec: ExperimentSpec):
         from repro.core import (DesignSpace, EXPECTED_WORKLOADS, LSMSystem,
-                                sample_benchmark)
+                                rho_from_history, sample_benchmark)
         self.spec = spec
         self.sys = LSMSystem().replace(**dict(spec.system)) if spec.system \
             else LSMSystem()
@@ -140,38 +189,57 @@ class CompiledExperiment:
             W = np.asarray(wl.workloads, np.float64)
             self.W = W / W.sum(axis=1, keepdims=True)
             self.widx = list(range(len(self.W)))
+        # resolved rho cells: the declared radii, plus — for the
+        # "from_history" rho source — one radius measured from the observed
+        # history (Algorithm 1 over its normalized rows)
+        self.rhos: Tuple[float, ...] = tuple(wl.rhos)
+        if wl.rho_source == "from_history":
+            H = np.asarray(wl.history, np.float64)
+            H = H / np.maximum(H.sum(axis=1, keepdims=True), 1e-30)
+            self.rhos += (float(rho_from_history(H)),)
         self.cells: List[Cell] = []
         if wl.nominal:
             self.cells += [(i, None) for i in range(len(self.W))]
         self.cells += [(i, rho) for i in range(len(self.W))
-                       for rho in wl.rhos]
+                       for rho in self.rhos]
         self.bench = sample_benchmark(wl.bench_n, seed=wl.bench_seed) \
             if wl.bench_n else None
 
         # -- arm -> tuning design grouping --------------------------------
+        # plans are keyed (DesignSpace, n_starts): the design-space axis
+        # may tune the same space at a different multi-start budget
         self.primary_design = DesignSpace(spec.design.space)
         self.arm_design: Dict[str, object] = {}
         for pol in spec.design.policies:
             space = ARM_DESIGNS.get(pol)
             self.arm_design[pol] = DesignSpace(space) if space is not None \
                 else self.primary_design
+        self.space_arms: List[Tuple[str, Tuple[object, int]]] = [
+            (name, (DesignSpace(name), n_starts))
+            for name, n_starts in spec.design.space_arms()]
 
     # -- tuning -----------------------------------------------------------
 
-    def tuning_plans(self) -> Dict[object, TuningPlan]:
-        """One plan per distinct design among the arms (usually one)."""
+    def tuning_plans(self) -> Dict[Tuple[object, int], TuningPlan]:
+        """One plan per distinct (design, n_starts) among the policy arms
+        and the design-space axis (usually one)."""
         if self.spec.design.fixed is not None:
             return {}
         d = self.spec.design
-        designs = []
+        keys: List[Tuple[object, int]] = []
         for pol in d.policies:
-            if self.arm_design[pol] not in designs:
-                designs.append(self.arm_design[pol])
-        return {ds: TuningPlan(W=self.W, rhos=self.spec.workload.rhos,
-                               nominal=self.spec.workload.nominal,
-                               design=ds, n_starts=d.n_starts, steps=d.steps,
-                               lr=d.lr, seed=d.seed, sys=self.sys)
-                for ds in designs}
+            key = (self.arm_design[pol], d.n_starts)
+            if key not in keys:
+                keys.append(key)
+        for _, key in self.space_arms:
+            if key not in keys:
+                keys.append(key)
+        return {key: TuningPlan(W=self.W, rhos=self.rhos,
+                                nominal=self.spec.workload.nominal,
+                                design=key[0], n_starts=key[1],
+                                steps=d.steps, lr=d.lr, seed=d.seed,
+                                sys=self.sys)
+                for key in keys}
 
     def _fixed_phi(self):
         from repro.core import make_phi
@@ -210,7 +278,8 @@ class CompiledExperiment:
             models: Dict[str, np.ndarray] = {}
             for pol in spec.design.policies:
                 r = fixed if fixed is not None \
-                    else solved[self.arm_design[pol]][cell]
+                    else solved[(self.arm_design[pol],
+                                 spec.design.n_starts)][cell]
                 c, cost = scorers[pol](r.phi, w,
                                        np.float32(rho or 0.0))
                 arms[pol] = r
@@ -225,10 +294,30 @@ class CompiledExperiment:
             if self.bench is not None:
                 bench_costs[cell] = np.asarray(self.bench, np.float64) \
                     @ models[best]
+        # -- the design-space axis: per-arm tunings + benchmark costs ------
+        # (scored through the primary policy's effective-phi scorer, so a
+        # space arm equals a separate spec with that primary space exactly)
+        design_tunings: Dict[str, Dict[Cell, object]] = {}
+        design_bench_costs: Dict[str, Dict[Cell, np.ndarray]] = {}
+        primary_scorer = scorers[spec.design.policies[0]]
+        for name, key in self.space_arms:
+            per_cell = dict(solved[key])
+            design_tunings[name] = per_cell
+            if self.bench is not None:
+                B = np.asarray(self.bench, np.float64)
+                costs_d: Dict[Cell, np.ndarray] = {}
+                for cell in self.cells:
+                    i, rho = cell
+                    c, _ = primary_scorer(per_cell[cell].phi,
+                                          np.asarray(self.W[i], np.float32),
+                                          np.float32(rho or 0.0))
+                    costs_d[cell] = B @ np.asarray(c, np.float64)
+                design_bench_costs[name] = costs_d
         return Report(spec=spec, sys=self.sys, cells=list(self.cells),
                       tunings=tunings, arm_costs=arm_costs, chosen=chosen,
                       model_costs=model_costs, bench_costs=bench_costs,
-                      bench_set=self.bench)
+                      bench_set=self.bench, design_tunings=design_tunings,
+                      design_bench_costs=design_bench_costs)
 
     # -- trial -------------------------------------------------------------
 
@@ -274,6 +363,45 @@ class CompiledExperiment:
                          f_a=tr.f_a, f_seq=tr.f_seq, zipf_a=tr.zipf_a,
                          bits_per_entry=self.sys.bits_per_entry,
                          sys_N=self.sys.N)
+
+    # -- drift --------------------------------------------------------------
+
+    def build_drift(self, report: Report) -> Optional[DriftPlan]:
+        """Lower the spec's drift schedule onto per-arm deployments.
+
+        ``stale_nominal`` starts from the cell (i, None); ``static_robust``
+        and ``online`` from (i, rho*) with rho* the LAST resolved rho —
+        under ``rho_source="from_history"`` that is the history-measured
+        budget; ``oracle`` is tuned per segment by the executor.  Trees
+        deploy the chosen policy arm of their source cell."""
+        dr = self.spec.drift
+        if dr is None:
+            return None
+        rho0 = self.rhos[-1] if self.rhos else 0.0
+        arms: List[DriftArmInit] = []
+        for i in range(len(self.W)):
+            for arm in dr.arms:
+                if arm == "oracle":
+                    cell, rho = None, 0.0
+                elif arm == "stale_nominal":
+                    cell, rho = (i, None), 0.0
+                else:                            # static_robust | online
+                    cell, rho = (i, rho0), rho0
+                tuning, pol = None, self.spec.design.policies[0]
+                if cell is not None:
+                    pol = report.chosen[cell]
+                    tuning = report.tunings[cell][pol]
+                engine_params = tuple(
+                    (k, v) for k, v in self.spec.design.params_for(pol)
+                    if k not in MODEL_ONLY_PARAMS)
+                arms.append(DriftArmInit(widx=i, arm=arm, tuning=tuning,
+                                         rho=rho, policy=pol,
+                                         policy_params=engine_params))
+        schedules = np.stack([drift_schedule(self.W[i], dr)
+                              for i in range(len(self.W))])
+        return DriftPlan(arms=arms, expected=np.asarray(self.W, np.float64),
+                         schedules=schedules, drift=dr, sys=self.sys,
+                         design=self.primary_design)
 
 
 def compile_spec(spec: ExperimentSpec) -> CompiledExperiment:

@@ -145,6 +145,16 @@ class Report:
         default_factory=dict)                 # -> [SessionResult per session]
     probes: Dict[Tuple[Cell, str], TreeProbe] = dataclasses.field(
         default_factory=dict)
+    #: the design-space axis (DesignSpec.spaces): space name -> cell ->
+    #: TuningResult, and the matching benchmark-set costs
+    design_tunings: Dict[str, Dict[Cell, Any]] = dataclasses.field(
+        default_factory=dict)
+    design_bench_costs: Dict[str, Dict[Cell, np.ndarray]] = \
+        dataclasses.field(default_factory=dict)
+    #: the drift experiment (ExperimentSpec.drift): (workload index, arm)
+    #: -> repro.online.DriftArmResult
+    drift: Dict[Tuple[int, str], Any] = dataclasses.field(
+        default_factory=dict)
     walls: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     # -- accessors ----------------------------------------------------------
@@ -211,6 +221,19 @@ class Report:
                         float(measured.mean() / model.mean()), 3),
                 )
             out.append(Row(f"{name}_{tag}", 0.0, **derived))
+        for (widx, arm), res in self.drift.items():
+            last = res.records[-1]
+            out.append(Row(
+                f"{name}_drift_w{widx}_{arm}", 0.0,
+                avg_io=round(res.avg_io_per_query, 4),
+                throughput=round(res.throughput, 4),
+                retunes=res.retunes,
+                segments=len(res.records),
+                final_kl=round(float(last.kl_est), 4),
+                final_rho=round(float(last.rho_live), 4),
+                segment_io=[round(r.avg_io_per_query, 3)
+                            for r in res.records],
+            ))
         out.append(Row(f"{name}_walls", self.wall_time_s * 1e6,
                        **{k: round(v, 3) for k, v in self.walls.items()},
                        cells=len(self.cells),

@@ -44,13 +44,21 @@ class WorkloadSpec:
     :data:`repro.core.EXPECTED_WORKLOADS`; ``workloads`` gives explicit
     (z0, z1, q, w) mixes instead (exactly one of the two must be set).
     ``rhos`` are the KL radii of ROBUST TUNING cells (one robust tuning per
-    workload x rho); the rho *source* heuristics
-    (``repro.core.rho_from_pair`` / ``rho_from_history`` /
-    ``rho_from_ranges``) produce values for this field.  ``nominal`` adds
-    the rho-free NOMINAL TUNING baseline per workload.  ``bench_n`` > 0
-    requests model evaluation of every tuning over a sampled benchmark set
-    B (``sample_benchmark(bench_n, bench_seed)``), the Section 8 metric
-    source."""
+    workload x rho).  ``nominal`` adds the rho-free NOMINAL TUNING baseline
+    per workload.  ``bench_n`` > 0 requests model evaluation of every
+    tuning over a sampled benchmark set B (``sample_benchmark(bench_n,
+    bench_seed)``), the Section 8 metric source.
+
+    ``rho_source`` declares where the robustness budget comes from:
+
+    * ``"fixed"`` (default) — exactly the declared ``rhos``; compilation is
+      bit-identical to a spec without the field.
+    * ``"from_history"`` — ``history`` carries observed workload mixes (or
+      op-count rows, e.g. ``SessionResult.window_ops`` windows) and the
+      compiler APPENDS one rho cell per workload whose radius is the
+      paper's Algorithm 1 on that history
+      (:func:`repro.core.rho_from_history`): the budget is the *measured*
+      KL spread of what was executed, not a declared guess."""
 
     indices: Optional[Tuple[int, ...]] = None
     workloads: Optional[Tuple[Tuple[float, ...], ...]] = None
@@ -58,11 +66,20 @@ class WorkloadSpec:
     nominal: bool = True
     bench_n: int = 0
     bench_seed: int = 0
+    rho_source: str = "fixed"
+    history: Optional[Tuple[Tuple[float, ...], ...]] = None
 
     def __post_init__(self):
         if (self.indices is None) == (self.workloads is None):
             raise ValueError("set exactly one of indices / workloads")
-        if not self.rhos and not self.nominal:
+        if self.rho_source not in ("fixed", "from_history"):
+            raise ValueError(f"unknown rho_source {self.rho_source!r}; "
+                             "use 'fixed' or 'from_history'")
+        if self.rho_source == "from_history":
+            if self.history is None or len(self.history) < 2:
+                raise ValueError("rho_source='from_history' needs a history "
+                                 "of at least 2 observed mixes")
+        elif not self.rhos and not self.nominal:
             raise ValueError("no tuning cells: empty rhos and nominal=False")
 
 
@@ -82,7 +99,16 @@ class DesignSpec:
 
     ``fixed`` = (T, filter bits/entry, K) bypasses tuning entirely and
     deploys that configuration in every cell (the compaction design-space
-    sweeps pin Theta to isolate the policy axis)."""
+    sweeps pin Theta to isolate the policy axis).
+
+    ``spaces`` makes the design space itself an experiment AXIS: each entry
+    is a design-space name or a ``(name, n_starts)`` pair, every arm is
+    tuned over the full cell grid (one batched plan per distinct
+    (space, n_starts)), and the report carries per-arm tunings and
+    benchmark costs (``Report.design_tunings`` / ``design_bench_costs``)
+    next to the primary results — the Figure-19 "flexibility vs robustness"
+    comparison as one spec instead of a loop of specs.  ``space`` stays the
+    *primary* design (rows, policy-arm selection, trials)."""
 
     space: str = "classic"
     policies: Tuple[str, ...] = ("klsm",)
@@ -92,15 +118,35 @@ class DesignSpec:
     lr: float = 0.25
     seed: int = 0
     fixed: Optional[Tuple[float, ...]] = None
+    spaces: Tuple[Any, ...] = ()
 
     def __post_init__(self):
         if not self.policies:
             raise ValueError("at least one policy arm is required")
         if self.fixed is not None and len(self.fixed) != 3:
             raise ValueError("fixed must be (T, filt_bits_per_entry, K)")
+        if self.spaces and self.fixed is not None:
+            raise ValueError("the design-space axis requires tuning; "
+                             "drop `spaces` or `fixed`")
+        for arm in self.spaces:
+            if not (isinstance(arm, str)
+                    or (isinstance(arm, tuple) and len(arm) == 2
+                        and isinstance(arm[0], str))):
+                raise ValueError(f"spaces entries are a name or a "
+                                 f"(name, n_starts) pair, got {arm!r}")
+        names = [a if isinstance(a, str) else a[0] for a in self.spaces]
+        if len(set(names)) != len(names):
+            # report results are keyed by space name; a repeated name
+            # would silently overwrite one arm with the other
+            raise ValueError(f"duplicate design-space arms in {names}")
 
     def params_for(self, policy: str) -> Pairs:
         return dict(self.policy_params).get(policy, ())
+
+    def space_arms(self) -> Tuple[Tuple[str, int], ...]:
+        """The design-space axis as (name, n_starts) pairs."""
+        return tuple((arm, self.n_starts) if isinstance(arm, str)
+                     else (arm[0], int(arm[1])) for arm in self.spaces)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +184,88 @@ class TrialSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class DriftSpec:
+    """An online drift experiment: the executed workload moves away from
+    the expected one over ``segments`` equal segments of ``n_queries``
+    queries, and per-arm deployments react (or don't) — the
+    :mod:`repro.online` loop as a declarative schedule.
+
+    **Schedule** — ``kind`` generates the per-segment true mixes from the
+    workload's expected mix and ``target``: ``"gradual"`` (linear rotation
+    expected -> target), ``"flip"`` (abrupt switch at mid-schedule),
+    ``"cyclic"`` (alternate expected / target per segment), or
+    ``"schedule"`` (take ``schedule`` rows verbatim, one per segment).
+
+    **Arms** — any of ``repro.online.ARMS``: ``stale_nominal`` deploys the
+    workload's nominal cell and never re-tunes; ``static_robust`` deploys
+    the robust cell at the spec's LAST resolved rho (with
+    ``rho_source="from_history"`` that is the history-derived budget) and
+    never re-tunes; ``online`` starts from the same robust cell and runs
+    the estimator + drift-trigger loop; ``oracle`` re-tunes every segment
+    to the true upcoming mix (the adaptation upper bound).  Arms of one
+    workload share the key population and per-segment session plans, so
+    throughput differences are tuning differences.
+
+    **Deployment** mirrors :class:`TrialSpec` (shared key draw at
+    ``key_seed``, engine scale via ``n_keys``/``entry_bytes``); estimator /
+    trigger / re-tune solver knobs map onto
+    :class:`repro.online.DriftPolicy`, ``repro.online.ESTIMATORS`` and
+    :func:`repro.online.retune_fleet`."""
+
+    kind: str = "gradual"
+    segments: int = 8
+    n_queries: int = 1000
+    target: Optional[Tuple[float, ...]] = None
+    schedule: Optional[Tuple[Tuple[float, ...], ...]] = None
+    arms: Tuple[str, ...] = ("stale_nominal", "static_robust", "online",
+                             "oracle")
+    # deployment (TrialSpec conventions)
+    n_keys: int = 100_000
+    key_space: int = 2 ** 48
+    range_fraction: float = 2e-5
+    entry_bytes: int = 64
+    key_seed: int = 7
+    session_seed: int = 0
+    f_a: float = 1.0
+    f_seq: float = 1.0
+    # estimator
+    estimator: str = "window"
+    alpha: float = 0.35
+    window: int = 16
+    capacity: int = 128
+    # drift triggers
+    kl_threshold: float = 0.05
+    budget_slack: float = 1.0
+    min_windows: int = 2
+    cooldown: int = 1
+    rho_floor: float = 0.05
+    # re-tune solver
+    retune_starts: int = 32
+    retune_steps: int = 200
+    retune_seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("gradual", "flip", "cyclic", "schedule"):
+            raise ValueError(f"unknown drift kind {self.kind!r}")
+        if self.kind == "schedule":
+            if self.schedule is None or len(self.schedule) != self.segments:
+                raise ValueError("kind='schedule' needs one schedule row "
+                                 "per segment")
+            if any(len(row) != 4 for row in self.schedule):
+                raise ValueError("schedule rows must be 4-class mixes")
+        elif self.target is None or len(self.target) != 4:
+            raise ValueError(f"kind={self.kind!r} needs a 4-class target "
+                             "mix")
+        if self.segments < 1:
+            raise ValueError("segments must be >= 1")
+        bad = set(self.arms) - {"stale_nominal", "static_robust", "online",
+                                "oracle"}
+        if bad or not self.arms:
+            raise ValueError(f"unknown drift arms {sorted(bad)}"
+                             if bad else "at least one arm is required")
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """The whole experiment: workload uncertainty x design x trial x backend.
 
@@ -151,9 +279,23 @@ class ExperimentSpec:
     workload: WorkloadSpec
     design: DesignSpec = DesignSpec()
     trial: Optional[TrialSpec] = None
+    drift: Optional[DriftSpec] = None
     system: Pairs = ()
     backend: str = "inline"
     backend_params: Pairs = ()
+
+    def __post_init__(self):
+        if self.drift is not None:
+            need_robust = {"static_robust", "online"} & set(self.drift.arms)
+            if need_robust and not self.workload.rhos \
+                    and self.workload.rho_source != "from_history":
+                raise ValueError(f"drift arms {sorted(need_robust)} need a "
+                                 "robust cell: declare rhos or "
+                                 "rho_source='from_history'")
+            if "stale_nominal" in self.drift.arms \
+                    and not self.workload.nominal:
+                raise ValueError("drift arm 'stale_nominal' needs "
+                                 "workload.nominal=True")
 
     # -- JSON round-trip ----------------------------------------------------
 
@@ -171,9 +313,12 @@ class ExperimentSpec:
         wl = {k: _tupled(v) for k, v in d.pop("workload").items()}
         ds = {k: _tupled(v) for k, v in d.pop("design", {}).items()}
         tr = d.pop("trial", None)
+        dr = d.pop("drift", None)
         return cls(workload=WorkloadSpec(**wl), design=DesignSpec(**ds),
                    trial=TrialSpec(**{k: _tupled(v) for k, v in tr.items()})
                    if tr is not None else None,
+                   drift=DriftSpec(**{k: _tupled(v) for k, v in dr.items()})
+                   if dr is not None else None,
                    **{k: _tupled(v) for k, v in d.items()})
 
     @classmethod

@@ -1,5 +1,6 @@
 from .store import (CheckpointStore, framework_storage_workload,
-                    tuned_manifest_tree)
+                    retune_storm, tuned_manifest_tree,
+                    tuned_manifest_trees)
 
 __all__ = ["CheckpointStore", "framework_storage_workload",
-           "tuned_manifest_tree"]
+           "retune_storm", "tuned_manifest_tree", "tuned_manifest_trees"]

@@ -51,6 +51,57 @@ def framework_storage_workload(ckpt_interval: int, restore_prob: float,
     return v / v.sum()
 
 
+def retune_storm(workloads, rhos, sys, seed: int = 0, design=None,
+                 n_starts: int = 64, steps: int = 250, lr: float = 0.25,
+                 pad_pow2: bool = False) -> list:
+    """One batched tuner dispatch for a fleet-wide re-tuning storm.
+
+    The storm path every online re-tune in the framework goes through: a
+    batch of (workload, rho) re-tune requests — manifest stores after a
+    config shift, :mod:`repro.online` drift triggers firing across a fleet —
+    becomes ONE ``tune_robust_many`` grid (workloads on one axis, the
+    distinct positive rhos on the other, each request picking its cell) plus
+    one ``tune_nominal_many`` batch for the ``rho <= 0`` requests, instead
+    of a per-request ``tune_robust`` loop.
+
+    ``pad_pow2`` pads the workload axis to the next power of two with
+    repeats of the last row (dropped from the result): storm sizes vary
+    call-to-call, and the batched tuners recompile per distinct grid shape —
+    bucketing shapes keeps a long-running adaptive loop to O(log fleet)
+    compilations.  The vmap lanes are independent, so padding never changes
+    the surviving results.
+
+    Returns one :class:`repro.core.TuningResult` per request, in order."""
+    from repro.core import tune_nominal_many
+    W = np.atleast_2d(np.asarray(workloads, np.float64))
+    R = np.asarray(rhos, np.float64).reshape(-1)
+    if len(W) != len(R):
+        raise ValueError(f"{len(W)} workloads for {len(R)} rhos")
+    kw = dict(n_starts=n_starts, steps=steps, lr=lr, seed=seed)
+    if design is not None:
+        kw["design"] = design
+
+    def padded(M: np.ndarray) -> np.ndarray:
+        if not pad_pow2 or len(M) < 2:
+            return M
+        P = 1 << (len(M) - 1).bit_length()
+        return np.concatenate([M, np.repeat(M[-1:], P - len(M), axis=0)])
+
+    out: list = [None] * len(W)
+    nom = np.flatnonzero(R <= 0)
+    if nom.size:
+        res = tune_nominal_many(padded(W[nom]), sys, **kw)
+        for i, r in zip(nom, res):
+            out[i] = r
+    rob = np.flatnonzero(R > 0)
+    if rob.size:
+        uniq = sorted(set(float(r) for r in R[rob]))
+        grid = tune_robust_many(padded(W[rob]), uniq, sys, **kw)
+        for row, i in zip(grid, rob):
+            out[i] = row[uniq.index(float(R[i]))]
+    return out
+
+
 def tuned_manifest_trees(specs: Sequence[Dict[str, Any]],
                          seed: int = 0) -> list:
     """Deploy ENDURE-tuned manifests for a whole fleet in ONE tuner dispatch.
@@ -58,11 +109,10 @@ def tuned_manifest_trees(specs: Sequence[Dict[str, Any]],
     ``specs`` is a sequence of dicts with the :func:`tuned_manifest_tree`
     keywords (``expected_entries``, ``ckpt_interval``, ``restore_prob``,
     ``rho``).  A re-tuning storm — every store in a fleet re-deriving its
-    manifest tuning after a config/workload shift — becomes one
-    ``tune_robust_many`` grid per distinct store size instead of a
-    per-(workload, rho) ``tune_robust`` loop: workloads batch on one axis,
-    distinct rhos on the other, and each spec picks its (workload, rho)
-    cell.  Specs sharing ``expected_entries`` share a compiled sweep."""
+    manifest tuning after a config/workload shift — goes through
+    :func:`retune_storm` (one batched grid per distinct store size) instead
+    of a per-(workload, rho) ``tune_robust`` loop.  Specs sharing
+    ``expected_entries`` share a compiled sweep."""
     trees: list = [None] * len(specs)
     by_n: Dict[int, list] = {}
     for i, spec in enumerate(specs):
@@ -76,10 +126,8 @@ def tuned_manifest_trees(specs: Sequence[Dict[str, Any]],
             specs[i].get("ckpt_interval", 100),
             specs[i].get("restore_prob", 0.3)) for i in idxs]
         rhos = [float(specs[i].get("rho", 1.0)) for i in idxs]
-        uniq = sorted(set(rhos))
-        grid = tune_robust_many(np.stack(W), uniq, sys_small, seed=seed)
-        for row, i, rho in zip(grid, idxs, rhos):
-            tuning = row[uniq.index(rho)]
+        tunings = retune_storm(np.stack(W), rhos, sys_small, seed=seed)
+        for i, tuning in zip(idxs, tunings):
             trees[i] = LSMTree.from_phi(tuning.phi, sys_small,
                                         expected_entries=n_entries,
                                         entry_bytes=256)

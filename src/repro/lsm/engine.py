@@ -158,13 +158,15 @@ class LSMTree:
 
     # -- construction from a tuning -------------------------------------
 
-    @classmethod
-    def from_phi(cls, phi, sys, expected_entries: int,
-                 buf_entries: Optional[int] = None,
-                 entry_bytes: int = 64, page_bytes: int = 4096,
-                 policy: str = "klsm",
-                 policy_params: Tuple[Tuple[str, Any], ...] = ()) -> "LSMTree":
-        """Deploy a tuner-recommended Phi at reduced scale.
+    @staticmethod
+    def config_from_phi(phi, sys, expected_entries: int,
+                        buf_entries: Optional[int] = None,
+                        entry_bytes: int = 64, page_bytes: int = 4096,
+                        policy: str = "klsm",
+                        policy_params: Tuple[Tuple[str, Any], ...] = ()
+                        ) -> EngineConfig:
+        """Lower a tuner-recommended Phi to an :class:`EngineConfig` at
+        reduced scale.
 
         The *shape* of the tuning (T, K profile, filter bits/entry) carries
         over; N/buffer are scaled to CPU-testable sizes with the memory split
@@ -183,12 +185,53 @@ class LSMTree:
             # preserve buffer share: buf_bits = buf_bpe * N_small
             buf_bits = buf_bpe * expected_entries
             buf_entries = max(64, int(buf_bits / (entry_bytes * 8)))
-        cfg = EngineConfig(T=T, K=K, buf_entries=buf_entries,
-                           entry_bytes=entry_bytes, page_bytes=page_bytes,
-                           mfilt_bits_per_entry=filt_bpe,
-                           expected_entries=expected_entries,
-                           policy=policy, policy_params=tuple(policy_params))
-        return cls(cfg)
+        return EngineConfig(T=T, K=K, buf_entries=buf_entries,
+                            entry_bytes=entry_bytes, page_bytes=page_bytes,
+                            mfilt_bits_per_entry=filt_bpe,
+                            expected_entries=expected_entries,
+                            policy=policy, policy_params=tuple(policy_params))
+
+    @classmethod
+    def from_phi(cls, phi, sys, expected_entries: int,
+                 buf_entries: Optional[int] = None,
+                 entry_bytes: int = 64, page_bytes: int = 4096,
+                 policy: str = "klsm",
+                 policy_params: Tuple[Tuple[str, Any], ...] = ()) -> "LSMTree":
+        """Deploy a tuner-recommended Phi at reduced scale
+        (see :meth:`config_from_phi`)."""
+        return cls(cls.config_from_phi(
+            phi, sys, expected_entries, buf_entries=buf_entries,
+            entry_bytes=entry_bytes, page_bytes=page_bytes, policy=policy,
+            policy_params=policy_params))
+
+    def retune(self, phi, sys) -> None:
+        """Swap the deployed tuning in place, at a flush boundary.
+
+        The online re-tuning primitive (:mod:`repro.online`): the write
+        buffer is flushed under the OLD tuning (so the swap lands exactly on
+        a flush boundary), then the config and planner are replaced.  The
+        adaptation is *gradual*, as in a live LSM deployment: existing runs
+        keep their Bloom allocations and layout; new flushes, merges, and
+        capacity triggers follow the new (T, K, memory split), so the tree
+        converges to the new shape through normal compaction — whose I/O is
+        charged to ``stats`` like any other compaction (the transition cost
+        is real and measured, not waved away).  Engine-scale knobs
+        (``expected_entries``, entry/page bytes) and the compaction policy
+        carry over from the current config.  A re-tune that resolves to the
+        CURRENT config is a no-op (no forced flush): an adaptive loop may
+        re-derive the same integral tuning every window without perturbing
+        the tree."""
+        cfg = self.config_from_phi(
+            phi, sys, self.cfg.expected_entries,
+            entry_bytes=self.cfg.entry_bytes,
+            page_bytes=self.cfg.page_bytes, policy=self.cfg.policy,
+            policy_params=self.cfg.policy_params)
+        if cfg == self.cfg:
+            return
+        self.flush()
+        self.cfg = cfg
+        self.planner = make_planner(cfg)
+        self._maintain()
 
     # -- bits allocation --------------------------------------------------
 

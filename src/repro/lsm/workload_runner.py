@@ -38,10 +38,22 @@ class SessionResult:
     queries: int
     avg_io_per_query: float
     io: IOStats
+    #: per-flush-window observed op counts, shape (n_windows, 4) int64 in
+    #: (z0, z1, q, w) order — the observation stream of the online drift
+    #: subsystem (:mod:`repro.online`).  Window w covers the query stream
+    #: between two flush boundaries (the final window is the unflushed
+    #: tail), so the rows sum exactly to the session plan's op counts.
+    window_ops: Optional[np.ndarray] = None
 
     @property
     def throughput(self) -> float:
         return 1.0 / max(self.avg_io_per_query, 1e-9)
+
+    @property
+    def observed_mix(self) -> np.ndarray:
+        """The session's executed (z0, z1, q, w) mix, from the counters."""
+        c = self.window_ops.sum(axis=0).astype(np.float64)
+        return c / max(c.sum(), 1.0)
 
 
 @dataclasses.dataclass
@@ -191,6 +203,8 @@ def execute_session(tree: LSMTree, plan: SessionPlan,
     write_enc = tree.store.codec.encode(1)    # sessions write value 1
     pi = qi = wi = 0
     n_wr = len(wr_pos)
+    win_start = 0
+    win_counts: List[np.ndarray] = []
     while pi < len(pt_pos) or qi < len(rq_pos) or wi < n_wr:
         # -- window extent: writes until the buffer reaches capacity --------
         if wi < n_wr:
@@ -212,6 +226,13 @@ def execute_session(tree: LSMTree, plan: SessionPlan,
         else:
             m = 0
             win_end = n
+        # -- observed op mix of the window (z0/z1/q/w counts): the window
+        #    covers stream positions [win_start, win_end] when the flush
+        #    fires at win_end, or the whole tail when it doesn't -----------
+        boundary = win_end + 1 if win_end < n else n
+        win_counts.append(np.bincount(kinds[win_start:boundary],
+                                      minlength=4).astype(np.int64))
+        win_start = boundary
         # -- reads of the window, against pre-flush levels ------------------
         pt_hi = int(np.searchsorted(pt_pos, win_end))
         if pt_hi > pi:
@@ -235,8 +256,11 @@ def execute_session(tree: LSMTree, plan: SessionPlan,
     reads_io = delta.random_reads + f_seq * delta.seq_reads
     write_io = f_seq * (delta.comp_pages_read + f_a * delta.comp_pages_written)
     avg = (reads_io + write_io) / max(n, 1)
+    window_ops = np.stack(win_counts) if win_counts \
+        else np.zeros((0, 4), np.int64)
     return SessionResult(workload=plan.workload, queries=n,
-                         avg_io_per_query=avg, io=delta)
+                         avg_io_per_query=avg, io=delta,
+                         window_ops=window_ops)
 
 
 def run_session(tree: LSMTree, existing_keys: np.ndarray, w: np.ndarray,

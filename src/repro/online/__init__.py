@@ -1,0 +1,35 @@
+"""Online drift subsystem: observe -> estimate -> re-tune, closed.
+
+ENDURE's premise is that the executed workload lives in a KL neighborhood
+of the expected one; everywhere else in this repo the expected workload is
+a static input.  This package closes the loop on top of the existing stack:
+
+* **observe** — the session executor emits per-flush-window op counts
+  (``SessionResult.window_ops``, :mod:`repro.lsm.workload_runner`);
+* **estimate** (:mod:`repro.online.estimate`) — bounded window histories,
+  sliding-window / EWMA mix estimators, and rho-from-history budgets
+  (scalar + fleet-vectorized);
+* **decide + re-tune** (:mod:`repro.online.retune`) — KL-threshold and
+  budget-exhaustion triggers, storms batched through
+  ``repro.checkpoint.store.retune_storm``;
+* **drive** (:mod:`repro.online.session`) — :class:`OnlineSession` swaps
+  tunings at flush boundaries via ``LSMTree.retune``; :func:`execute_drift`
+  runs whole drift experiments (the ``repro.api`` `DriftSpec` lowering).
+"""
+
+from .estimate import (ESTIMATORS, EWMAEstimator, SlidingWindowEstimator,
+                       WindowHistory, kl_np, make_estimator,
+                       normalize_counts, rho_from_history_batch,
+                       rho_from_windows, smooth_mix)
+from .retune import DriftPolicy, RetuneRequest, retune_fleet
+from .session import (ARMS, DriftArmResult, OnlineSession, SegmentRecord,
+                      execute_drift)
+
+__all__ = [
+    "WindowHistory", "SlidingWindowEstimator", "EWMAEstimator",
+    "ESTIMATORS", "make_estimator", "normalize_counts", "kl_np",
+    "rho_from_windows", "rho_from_history_batch", "smooth_mix",
+    "DriftPolicy", "RetuneRequest", "retune_fleet",
+    "ARMS", "OnlineSession", "SegmentRecord", "DriftArmResult",
+    "execute_drift",
+]

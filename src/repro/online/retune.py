@@ -1,0 +1,84 @@
+"""Drift triggers and the storm-batched re-tune path.
+
+The *policy* half of the online loop: :class:`DriftPolicy` decides — from
+the estimator's current mix and the tuning's expected mix — whether a
+deployment's tuning is stale, and :func:`retune_fleet` turns every fired
+trigger across a fleet into ONE batched tuner dispatch through
+``repro.checkpoint.store.retune_storm`` (workloads on one grid axis,
+distinct rhos on the other, power-of-two shape bucketing so a long-running
+adaptive loop compiles O(log fleet) programs, not one per storm).
+
+Two triggers, both in KL space (the same divergence the uncertainty region
+is defined in):
+
+* **threshold** — the estimated mix drifted more than ``kl_threshold`` nats
+  from the mix the live tuning was derived for;
+* **budget exhaustion** — the drift exceeds ``budget_slack`` x the live
+  tuning's own rho: the executed workload left the uncertainty ball the
+  robust tuning was hedged over, so its worst-case guarantee no longer
+  covers reality.
+
+``min_windows`` gates both (no re-tuning off a cold estimator) and
+``cooldown`` enforces a minimum number of segments between re-tunes
+(hysteresis: a re-tune moves the expected mix to the estimate, so a noisy
+estimator cannot thrash the solver)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftPolicy:
+    kl_threshold: float = 0.05
+    budget_slack: float = 1.0
+    min_windows: int = 2
+    cooldown: int = 1
+    #: floor for re-derived rho budgets (a steady post-drift history still
+    #: keeps a hedge; also keeps the re-tune on the robust solver path)
+    rho_floor: float = 0.05
+
+    def decide(self, kl_obs: float, rho_live: float, n_windows: int,
+               since_retune: int) -> Optional[str]:
+        """The trigger: a reason string when a re-tune should fire, else
+        None.  ``since_retune`` counts segments since the last swap."""
+        if n_windows < self.min_windows or since_retune < self.cooldown:
+            return None
+        if rho_live > 0.0 and kl_obs > self.budget_slack * rho_live:
+            return "budget_exhausted"
+        if kl_obs > self.kl_threshold:
+            return "kl_threshold"
+        return None
+
+
+@dataclasses.dataclass
+class RetuneRequest:
+    """One fleet member's fired trigger: re-tune for ``w`` at budget
+    ``rho`` (``rho <= 0`` requests the nominal solver — the oracle path)."""
+
+    w: np.ndarray
+    rho: float
+    reason: str = ""
+
+
+def retune_fleet(requests: Sequence[RetuneRequest], sys, design=None,
+                 n_starts: int = 32, steps: int = 200, lr: float = 0.25,
+                 seed: int = 0) -> List[object]:
+    """Solve every fired trigger of a fleet in one storm dispatch.
+
+    Thin adapter onto :func:`repro.checkpoint.store.retune_storm` (the
+    framework's one batched re-tune path) with shape bucketing enabled.
+    ``design`` pins the design space the deployments were tuned in (None =
+    the tuners' default) so a re-tune never swaps a tree across spaces.
+    Returns one ``TuningResult`` per request, in order."""
+    from repro.checkpoint.store import retune_storm
+    if not requests:
+        return []
+    W = np.stack([np.asarray(r.w, np.float64) for r in requests])
+    rhos = [float(r.rho) for r in requests]
+    return retune_storm(W, rhos, sys, seed=seed, design=design,
+                        n_starts=n_starts, steps=steps, lr=lr,
+                        pad_pow2=True)

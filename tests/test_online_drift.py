@@ -1,0 +1,401 @@
+"""Tests for the online drift subsystem (repro.online) and its API surface.
+
+Covers the tentpole contract end to end: observed-mix accounting is
+bit-exact against session plans, rho-from-history reproduces hand-computed
+KL, the drift triggers and in-place engine re-tune behave, the storm path
+is bit-identical to individual tuner calls (padding included), the
+WorkloadSpec rho source round-trips and compiles, the design-space axis
+matches per-space specs, the remote backend stub is registered-but-raising,
+and the perf gate exits "misconfigured" (not crash / phantom regression)
+on a baseline missing its CHECK_METRICS keys.
+
+Deliberately hypothesis-free; solver sizes match test_api_spec's SMALL so
+the jit cache is shared and the file stays fast."""
+
+import dataclasses
+import math
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import LSMSystem, make_phi, rho_from_history, tune_nominal, \
+    tune_robust
+from repro.lsm import (EngineConfig, LSMTree, execute_session,
+                       materialize_session, populate)
+from repro.online import (DriftPolicy, EWMAEstimator, OnlineSession,
+                          SlidingWindowEstimator, WindowHistory, kl_np,
+                          rho_from_history_batch, rho_from_windows)
+
+SMALL = dict(n_starts=8, steps=60, seed=3)
+SYS_PAIRS = (("N", 8000.0), ("entry_bits", 512.0), ("bits_per_entry", 6.0),
+             ("min_buf_bits", 512.0 * 64), ("max_T", 20.0))
+SYS = LSMSystem().replace(**dict(SYS_PAIRS))
+
+
+def _small_tree(T=4, buf=64, n=1500, mfilt=6.0):
+    tree = LSMTree(EngineConfig(T=T, buf_entries=buf,
+                                mfilt_bits_per_entry=mfilt,
+                                expected_entries=n))
+    keys = populate(tree, n, seed=11, key_space=2 ** 20)
+    return tree, keys
+
+
+# ---------------------------------------------------------------------------
+# Observation: window counters vs session plans (golden accounting)
+# ---------------------------------------------------------------------------
+
+def test_window_ops_sum_exactly_to_plan_counts():
+    """Per-window op counters partition the session plan's op counts
+    bit-exactly across flush boundaries."""
+    tree, keys = _small_tree()
+    plan = materialize_session(keys, (0.2, 0.2, 0.1, 0.5), n_queries=900,
+                               seed=5, key_space=2 ** 20,
+                               range_fraction=1e-3)
+    seq_before = tree.flush_seq
+    res = execute_session(tree, plan)
+    assert res.window_ops is not None and res.window_ops.dtype == np.int64
+    # bit-exact partition of the plan
+    plan_counts = np.bincount(plan.kinds, minlength=4)
+    assert np.array_equal(res.window_ops.sum(axis=0), plan_counts)
+    assert res.window_ops.min() >= 0
+    # one window per session flush, plus the unflushed tail
+    flushes = tree.flush_seq - seq_before
+    assert flushes >= 3, "test needs several flush windows to mean anything"
+    assert len(res.window_ops) in (flushes, flushes + 1)
+    # every flush window ends on a write (the flush-triggering put)
+    assert all(res.window_ops[i, 3] > 0 for i in range(flushes))
+    assert np.allclose(res.observed_mix.sum(), 1.0)
+
+
+def test_window_ops_empty_and_readonly_sessions():
+    tree, keys = _small_tree()
+    plan = materialize_session(keys, (0.5, 0.5, 0.0, 0.0), n_queries=120,
+                               seed=2, key_space=2 ** 20)
+    res = execute_session(tree, plan)
+    assert res.window_ops.shape == (1, 4)          # no flush: one tail window
+    assert np.array_equal(res.window_ops.sum(axis=0),
+                          np.bincount(plan.kinds, minlength=4))
+
+
+# ---------------------------------------------------------------------------
+# Estimation: hand-computed KL, estimators, fleet batch
+# ---------------------------------------------------------------------------
+
+def test_rho_from_history_reproduces_hand_computed_kl():
+    """Algorithm 1 on a 2-window toy history, against the formula by hand."""
+    w1 = np.array([0.5, 0.2, 0.2, 0.1])
+    w2 = np.array([0.1, 0.2, 0.2, 0.5])
+    mean = (w1 + w2) / 2.0                          # (0.3, 0.2, 0.2, 0.3)
+    hand = max(
+        sum(p * math.log(p / q) for p, q in zip(w1, mean)),
+        sum(p * math.log(p / q) for p, q in zip(w2, mean)))
+    assert rho_from_history(np.stack([w1, w2])) == pytest.approx(
+        hand, rel=1e-6)                             # core path is float32
+    # the online scalar twin agrees (given counts, not mixes)
+    counts = np.stack([w1, w2]) * 1000
+    assert rho_from_windows(counts) == pytest.approx(hand, rel=1e-9)
+    # explicit center: KL against the center, not the mean
+    rho_c = rho_from_windows(counts, center=w1)
+    hand_c = sum(p * math.log(p / q) for p, q in zip(w2, w1))
+    assert rho_c == pytest.approx(hand_c, rel=1e-9)
+    # floor clamps
+    assert rho_from_windows(np.stack([w1, w1]), floor=0.25) == 0.25
+
+
+def test_rho_from_history_batch_matches_scalar():
+    rng = np.random.default_rng(0)
+    E = rng.dirichlet(np.ones(4), size=3)
+    C = rng.integers(1, 500, size=(3, 5, 4))
+    rhos = rho_from_history_batch(E, C, floor=0.01)
+    assert rhos.shape == (3,)
+    for f in range(3):
+        mixes = C[f] / C[f].sum(axis=1, keepdims=True)
+        want = max(float(kl_np(m, E[f])) for m in mixes)
+        assert rhos[f] == pytest.approx(max(want, 0.01), rel=1e-6)
+
+
+def test_window_history_ring_and_estimators():
+    h = WindowHistory(capacity=4)
+    for i in range(6):                       # wraps: windows 2..5 survive
+        h.append([i, 0, 0, 10])
+    assert len(h) == 4 and h.total_windows == 6
+    assert np.array_equal(h.counts()[:, 0], [2, 3, 4, 5])
+    # sliding window: count-weighted over the last `window` rows
+    est = SlidingWindowEstimator(window=2).estimate(h)
+    assert est == pytest.approx(np.array([9, 0, 0, 20]) / 29.0)
+    # ewma: weights (1-a)^age, renormalized; newest dominates as a -> 1
+    near_one = EWMAEstimator(alpha=0.999).estimate(h)
+    assert near_one == pytest.approx(np.array([5, 0, 0, 10]) / 15.0,
+                                     abs=1e-2)
+    # batch append equals row-by-row
+    h2 = WindowHistory(capacity=4)
+    h2.append(np.array([[i, 0, 0, 10] for i in range(6)]))
+    assert np.array_equal(h.counts(), h2.counts())
+
+
+# ---------------------------------------------------------------------------
+# Policy triggers
+# ---------------------------------------------------------------------------
+
+def test_drift_policy_triggers():
+    p = DriftPolicy(kl_threshold=0.1, budget_slack=1.0, min_windows=3,
+                    cooldown=2)
+    big = 10 ** 9
+    assert p.decide(0.5, 1.0, n_windows=2, since_retune=big) is None
+    assert p.decide(0.5, 1.0, n_windows=3, since_retune=1) is None  # cooldown
+    assert p.decide(0.05, 1.0, n_windows=3, since_retune=big) is None
+    assert p.decide(0.5, 1.0, 3, big) == "kl_threshold"
+    # budget exhaustion outranks the threshold reason
+    assert p.decide(1.5, 1.0, 3, big) == "budget_exhausted"
+    # nominal deployments (rho 0) never exhaust a budget
+    assert p.decide(1.5, 0.0, 3, big) == "kl_threshold"
+
+
+# ---------------------------------------------------------------------------
+# Engine re-tune + the storm path
+# ---------------------------------------------------------------------------
+
+def test_engine_retune_in_place():
+    tree, keys = _small_tree(T=4, n=1500)
+    probe = keys[::97]
+    before = [tree.get(int(k)) for k in probe]
+    old_cfg = tree.cfg
+    phi = make_phi(8.0, 4.0 * SYS.N, 1.0, SYS)
+    tree.retune(phi, SYS)
+    assert tree.cfg.T == 8 and tree.cfg is not old_cfg
+    assert len(tree.buffer) == 0                    # swapped at flush boundary
+    # data survives; structure converges through normal writes
+    assert [tree.get(int(k)) for k in probe] == before
+    comp_before = tree.stats.comp_pages_written
+    tree.put_batch(np.arange(2 ** 21, 2 ** 21 + 600, dtype=np.uint64),
+                   np.ones(600, np.int64))
+    tree.flush()
+    assert tree.stats.comp_pages_written > comp_before  # transition measured
+    assert [tree.get(int(k)) for k in probe] == before
+    # re-tuning to the identical config is a no-op (no forced flush)
+    tree.put(int(probe[0]), 7)
+    tree.retune(phi, SYS)
+    assert len(tree.buffer) == 1
+
+
+def test_retune_storm_bit_identical_to_individual_calls():
+    from repro.checkpoint import retune_storm
+    W = np.array([[0.05, 0.85, 0.05, 0.05],
+                  [0.05, 0.05, 0.05, 0.85],
+                  [0.25, 0.25, 0.25, 0.25]])
+    rhos = [1.0, 0.0, 0.25]
+    out = retune_storm(W, rhos, SYS, pad_pow2=True, **SMALL)
+    direct = [tune_robust(W[0], rho=1.0, sys=SYS, **SMALL),
+              tune_nominal(W[1], SYS, **SMALL),
+              tune_robust(W[2], rho=0.25, sys=SYS, **SMALL)]
+    for got, want in zip(out, direct):
+        assert float(got.phi.T) == float(want.phi.T)
+        assert np.array_equal(np.asarray(got.phi.K), np.asarray(want.phi.K))
+        assert float(got.phi.mfilt_bits) == float(want.phi.mfilt_bits)
+        assert got.cost == want.cost
+
+
+# ---------------------------------------------------------------------------
+# API: rho source, design axis, remote stub, drift end-to-end
+# ---------------------------------------------------------------------------
+
+def _api():
+    from repro import api
+    return api
+
+
+def test_rho_source_round_trip_and_compile():
+    api = _api()
+    hist = ((0.01, 0.01, 0.01, 0.97), (0.33, 0.33, 0.33, 0.01))
+    spec = api.ExperimentSpec(
+        name="rs",
+        workload=api.WorkloadSpec(indices=(4,), rhos=(0.5,), nominal=True,
+                                  rho_source="from_history", history=hist),
+        design=api.DesignSpec(**SMALL), system=SYS_PAIRS)
+    back = api.ExperimentSpec.from_json(spec.to_json())
+    assert back == spec
+    cx = api.compile_spec(back)
+    want = float(rho_from_history(np.asarray(hist)))
+    assert cx.rhos == (0.5, want)                  # declared + measured
+    assert cx.cells == [(0, None), (0, 0.5), (0, want)]
+    with pytest.raises(ValueError):
+        api.WorkloadSpec(indices=(4,), rho_source="from_history")
+    with pytest.raises(ValueError):
+        api.WorkloadSpec(indices=(4,), rho_source="sometimes")
+
+
+@pytest.mark.parametrize("backend", ["inline", "sharded"])
+def test_fixed_rho_source_bit_identical(backend):
+    """The default 'fixed' source compiles to exactly the pre-field
+    behavior on the inline AND sharded backends."""
+    api = _api()
+    spec = api.ExperimentSpec(
+        name="fx",
+        workload=api.WorkloadSpec(indices=(7,), rhos=(1.0,), nominal=False,
+                                  rho_source="fixed"),
+        design=api.DesignSpec(**SMALL), system=SYS_PAIRS, backend=backend)
+    report = api.run_experiment(spec)
+    want = tune_robust(np.asarray([0.49, 0.01, 0.01, 0.49]), rho=1.0,
+                       sys=SYS, **SMALL)
+    got = report.tuning((0, 1.0))
+    assert float(got.phi.T) == float(want.phi.T)
+    assert np.array_equal(np.asarray(got.phi.K), np.asarray(want.phi.K))
+    assert got.cost == want.cost
+
+
+def test_design_space_axis_matches_per_space_specs():
+    api = _api()
+    arms = (("classic", 8), ("lazy_leveling", 4))
+    axis = api.run_experiment(api.ExperimentSpec(
+        name="axis",
+        workload=api.WorkloadSpec(indices=(7,), nominal=True, bench_n=64),
+        design=api.DesignSpec(spaces=arms, **SMALL), system=SYS_PAIRS))
+    for space, n_starts in arms:
+        solo = api.run_experiment(api.ExperimentSpec(
+            name=f"solo_{space}",
+            workload=api.WorkloadSpec(indices=(7,), nominal=True,
+                                      bench_n=64),
+            design=api.DesignSpec(space=space,
+                                  **{**SMALL, "n_starts": n_starts}),
+            system=SYS_PAIRS))
+        a = axis.design_tunings[space][(0, None)]
+        b = solo.tuning((0, None))
+        assert float(a.phi.T) == float(b.phi.T)
+        assert np.array_equal(np.asarray(a.phi.K), np.asarray(b.phi.K))
+        assert a.cost == b.cost
+        assert np.array_equal(axis.design_bench_costs[space][(0, None)],
+                              solo.bench_costs[(0, None)])
+    # primary results are untouched by the axis
+    assert axis.chosen[(0, None)] == "klsm"
+    with pytest.raises(ValueError):
+        api.DesignSpec(spaces=(("classic", 8),), fixed=(6.0, 4.0, 1.0))
+    with pytest.raises(ValueError):        # report keys are space names
+        api.DesignSpec(spaces=(("classic", 8), ("classic", 16)))
+
+
+def test_remote_backend_is_registered_stub():
+    api = _api()
+    spec = api.ExperimentSpec(
+        name="rb", workload=api.WorkloadSpec(indices=(4,)),
+        backend="remote", backend_params=(("scheduler", "slurm"),))
+    assert api.ExperimentSpec.from_json(spec.to_json()) == spec
+    backend = api.get_backend(spec.backend, spec.backend_params)
+    assert backend.name == "remote" and backend.scheduler == "slurm"
+    job = backend.serialize_job(spec)
+    assert api.ExperimentSpec.from_json(job) == spec   # spec-serializing
+    with pytest.raises(NotImplementedError, match="scheduling stub"):
+        api.run_experiment(spec)
+
+
+def test_drift_experiment_end_to_end():
+    """A tiny flip experiment: all arms run paired, the online arm
+    re-tunes, and the report serializes in the BENCH schema."""
+    api = _api()
+    target = (0.33, 0.33, 0.33, 0.01)
+    spec = api.ExperimentSpec(
+        name="dd",
+        workload=api.WorkloadSpec(indices=(4,), nominal=True,
+                                  rho_source="from_history",
+                                  history=((0.01, 0.01, 0.01, 0.97),
+                                           target)),
+        design=api.DesignSpec(**SMALL), system=SYS_PAIRS,
+        drift=api.DriftSpec(kind="flip", segments=4, n_queries=250,
+                            target=target, n_keys=4000, key_space=2 ** 22,
+                            window=2, min_windows=1, cooldown=1,
+                            retune_starts=4, retune_steps=40))
+    report = api.run_experiment(spec)
+    arms = {arm for _, arm in report.drift}
+    assert arms == {"stale_nominal", "static_robust", "online", "oracle"}
+    online = report.drift[(0, "online")]
+    assert online.retunes >= 1                      # the flip fires the loop
+    assert report.drift[(0, "stale_nominal")].retunes == 0
+    for res in report.drift.values():               # paired arms, same load
+        assert [r.queries for r in res.records] == [250] * 4
+        assert res.avg_io_per_query > 0
+    # post-retune the online arm re-centers: drift vs the live expected mix
+    # collapses from its post-flip peak
+    peak = max(r.kl_est for r in online.records)
+    assert online.records[-1].kl_est < 0.5 * peak
+    import json
+    payload = report.to_bench_payload()
+    json.dumps(payload, allow_nan=False)
+    names = [r["name"] for r in payload["rows"]]
+    assert "dd_drift_w0_online" in names
+    # re-tunes solve in the spec's design space, not a hardcoded default
+    plan = api.compile_spec(spec).build_drift(report)
+    assert plan.design.value == "classic"
+    # schedule validation
+    with pytest.raises(ValueError):
+        api.DriftSpec(kind="gradual", target=None)
+    with pytest.raises(ValueError):       # schedule rows must be 4-wide
+        api.DriftSpec(kind="schedule", segments=2,
+                      schedule=((0.5, 0.3, 0.2), (0.2, 0.3, 0.5)))
+    with pytest.raises(ValueError):
+        dataclasses.replace(spec, drift=api.DriftSpec(
+            kind="flip", target=target, arms=("mystery",)))
+
+
+def test_online_session_budget_resets_on_apply():
+    tree, keys = _small_tree()
+    sess = OnlineSession(tree, expected=(0.01, 0.01, 0.01, 0.97), rho=0.3,
+                         sys=SYS, mode="online",
+                         policy=DriftPolicy(min_windows=1, cooldown=1),
+                         estimator=SlidingWindowEstimator(window=4))
+    plan = materialize_session(keys, (0.45, 0.45, 0.05, 0.05),
+                               n_queries=400, seed=9, key_space=2 ** 20)
+    rec = sess.execute_segment(plan, (0.45, 0.45, 0.05, 0.05), 0)
+    assert rec.kl_est > 0.3                         # way outside the budget
+    req = sess.take_request()
+    assert req is not None and req.reason == "budget_exhausted"
+    assert sess.take_request() is None              # consumed
+    sess.apply(tune_nominal(np.asarray(req.w), SYS, **SMALL), req.w,
+               req.rho, req.reason)
+    assert sess.rho == req.rho
+    rec2 = sess.execute_segment(plan, (0.45, 0.45, 0.05, 0.05), 1)
+    assert rec2.retuned and rec2.retune_reason == "budget_exhausted"
+    assert rec2.kl_est < rec.kl_est                 # re-centered
+
+
+# ---------------------------------------------------------------------------
+# Perf gate: misconfigured baselines exit 2, not crash / phantom regression
+# ---------------------------------------------------------------------------
+
+def _run_py():
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.run import _check_suite
+    return _check_suite
+
+
+def test_check_suite_missing_metrics_is_misconfigured():
+    _check_suite = _run_py()
+    import benchmarks.run as run_mod
+    from repro.api import Row
+    n_gated = len(run_mod.CHECK_METRICS["online"])
+    rows = [Row("online_fleet", 0.0, engine_s=5.0),
+            Row("online_summary", 0.0, online_recovery_min=1.1,
+                claim_online_ge_robust_ge_stale=True)]
+    # baseline valid JSON but missing the CHECK_METRICS keys -> misconfig
+    base = {"wall_time_s": 1.0, "rows": [{"name": "online_fleet",
+                                          "derived": {}}]}
+    regs, miscfg = _check_suite("online", rows, 1.0, base, tol=1.5)
+    assert regs == []
+    assert len(miscfg) == n_gated and all("BENCH_online.json" in m
+                                          for m in miscfg)
+    # structurally-wrong baselines are misconfigured too, never a crash
+    assert _check_suite("online", rows, 1.0, [1, 2], tol=1.5)[1]
+    assert _check_suite("online", rows, 1.0, {"rows": "nope"}, tol=1.5)[1]
+    assert _check_suite("online", rows, 1.0, {"rows": [42]}, tol=1.5)[1]
+    # a metric missing from the RUN stays a regression
+    base_ok = {"wall_time_s": 1.0, "rows": [
+        {"name": "online_fleet", "derived": {"engine_s": 5.0}},
+        {"name": "online_summary",
+         "derived": {"online_recovery_min": 1.1,
+                     "claim_online_ge_robust_ge_stale": True}}]}
+    regs, miscfg = _check_suite("online", [rows[0]], 1.0, base_ok, tol=1.5)
+    assert miscfg == [] and any("missing (run)" in r for r in regs)
+    # and the healthy path still passes clean
+    regs, miscfg = _check_suite("online", rows, 1.0, base_ok, tol=1.5)
+    assert regs == [] and miscfg == []
