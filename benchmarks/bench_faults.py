@@ -1,0 +1,134 @@
+"""Fault-tolerance suite: the recovery invariant and its overhead, gated.
+
+Two claims the perf gate watches (``CHECK_METRICS["faults"]``):
+
+* ``faults_recovery.identical_to_inline`` — a chaos schedule (worker crash
+  + corrupted result pickle, deterministic seeds) thrown at the hardened
+  subprocess backend recovers results bit-identical to the inline
+  reference.  A flip to False is the robustness layer silently changing
+  semantics — the one thing it must never do.
+* ``faults_overhead.overhead_ratio`` — the supervision machinery
+  (fault-plan consultation, retry bookkeeping, shard supervision) with NO
+  faults injected, measured against a bare launch of the identical shard
+  set with none of that machinery.  Target: indistinguishable (< 2%
+  overhead on the median); the gate catches the ratio regressing.
+
+Trial sizes are chosen so worker startup does not drown the signal but the
+suite stays CI-sized.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import List
+
+from repro.api import (DesignSpec, ExperimentSpec, FaultSpec, Row, TrialSpec,
+                       WorkloadSpec, run_experiment)
+
+N_KEYS = 30_000
+QUERIES = 1500
+SESSIONS = ((0.05, 0.85, 0.05, 0.05),)
+REPS = 5     # overhead legs: median over REPS runs per path
+
+SPEC = ExperimentSpec(
+    name="faults",
+    workload=WorkloadSpec(indices=(4, 7, 9, 11), rhos=(), nominal=True),
+    design=DesignSpec(fixed=(6.0, 4.0, 1.0)),   # no tuning: engine-only
+    trial=TrialSpec(n_keys=N_KEYS, n_queries=QUERIES, sessions=SESSIONS,
+                    key_space=2 ** 24, per_workload_keys=True, key_seed=11),
+    system=(("N", float(N_KEYS)), ("entry_bits", 64.0 * 8),
+            ("bits_per_entry", 6.0), ("min_buf_bits", 64.0 * 8 * 64),
+            ("max_T", 20.0)),
+)
+
+CHAOS = (FaultSpec(kind="crash", shards=(0,), max_hits=1, seed=0),
+         FaultSpec(kind="corrupt", shards=(1,), max_hits=1, seed=0))
+
+
+def _identical(a, b) -> bool:
+    if set(a.fleet) != set(b.fleet) or a.failed_cells or b.failed_cells:
+        return False
+    return all(x.io == y.io
+               for key in a.fleet
+               for x, y in zip(a.fleet[key], b.fleet[key])) \
+        and all(a.probes[k] == b.probes[k] for k in a.fleet)
+
+
+def _bare_wall(backend, plan) -> float:
+    """The machinery-free reference: the same shard partition launched
+    directly (no fault plan, no retry loop, no supervisor, no persistence)
+    — what the pre-hardening backend did."""
+    import concurrent.futures
+    import os
+    import pickle
+    import subprocess
+    import sys
+    shards = backend._partition(plan)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(p for p in sys.path if p)
+    cmd = [sys.executable, "-c",
+           "from repro.api.backends import _worker_main; _worker_main()"]
+
+    def launch(shard):
+        job = pickle.dumps((plan, [plan.trees[t] for t in shard]),
+                           protocol=pickle.HIGHEST_PROTOCOL)
+        proc = subprocess.run(cmd, input=job, stdout=subprocess.PIPE,
+                              env=env, check=True)
+        return pickle.loads(proc.stdout)
+
+    t0 = time.time()
+    with concurrent.futures.ThreadPoolExecutor(len(shards)) as pool:
+        list(pool.map(launch, shards))
+    return time.time() - t0
+
+
+def run() -> List[Row]:
+    from repro.api import compile_spec, get_backend
+    rows: List[Row] = []
+
+    # -- leg 1: recovery fidelity under chaos -------------------------------
+    inline = run_experiment(SPEC)
+    chaos_spec = ExperimentSpec.from_json(
+        SPEC.to_json())  # chaos scenario round-trips like any spec
+    import dataclasses
+    chaos_spec = dataclasses.replace(
+        chaos_spec, backend="subprocess",
+        backend_params=(("workers", 2), ("max_retries", 2),
+                        ("timeout_s", 300.0)),
+        faults=CHAOS)
+    t0 = time.time()
+    chaos = run_experiment(chaos_spec)
+    chaos_s = time.time() - t0
+    rows.append(Row(
+        "faults_recovery", chaos_s * 1e6,
+        identical_to_inline=_identical(inline, chaos),
+        injected=len(CHAOS), shard_retries=int(chaos.walls["shard_retries"]),
+        shards_run=int(chaos.walls["shards_run"]),
+        failed_trees=int(chaos.walls["failed_trees"]),
+        trees=len(chaos.fleet), n_keys=N_KEYS, n_queries=QUERIES,
+    ))
+
+    # -- leg 2: machinery overhead with faults disabled ---------------------
+    cx = compile_spec(SPEC)
+    solved = {d: get_backend("inline", ()).solve(p)
+              for d, p in cx.tuning_plans().items()}
+    backend = get_backend("subprocess", (("workers", 2),))
+    plan = cx.build_trial(cx.select_arms(solved))
+    supervised, bare = [], []
+    for _ in range(REPS):
+        report = cx.select_arms(solved)
+        t0 = time.time()
+        backend.run_trial(plan, report)      # empty fault plan, full path
+        supervised.append(time.time() - t0)
+        bare.append(_bare_wall(backend, plan))
+    sup_s = statistics.median(supervised)
+    bare_s = statistics.median(bare)
+    rows.append(Row(
+        "faults_overhead", sup_s * 1e6,
+        overhead_ratio=round(sup_s / bare_s, 4),
+        overhead_pct=round((sup_s / bare_s - 1.0) * 100.0, 2),
+        supervised_s=round(sup_s, 3), bare_s=round(bare_s, 3),
+        reps=REPS, workers=2, trees=len(plan.trees),
+    ))
+    return rows

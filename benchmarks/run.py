@@ -17,6 +17,11 @@ PRs have a machine-readable perf trajectory to compare against.
 same CSV/BENCH-json formats — new scenarios need a JSON file, not a new
 bench script.  The spec's ``name`` becomes the suite name.
 
+``--spec`` composes with the crash-safe sweep substrate: ``--run-dir DIR``
+hands the subprocess backend a directory to persist per-shard results into
+(atomic, checksummed), and ``--resume`` re-runs a killed sweep executing
+only the shards that never completed (``docs/faults.md``).
+
 ``--check`` re-runs the selected suites and diffs the measured perf
 trajectory against the committed ``BENCH_<suite>.json`` baselines
 (``--baseline DIR``, default the repo root): per-suite wall time plus the
@@ -26,7 +31,9 @@ Exit codes are distinct so CI can tell the failure modes apart: 1 for a
 perf regression (or a crashed suite), 2 for a *misconfigured* gate — a
 checked suite with no committed baseline (a new suite must commit its
 ``BENCH_<suite>.json`` before the gate can watch it), a committed baseline
-that parses as JSON but lacks the suite's ``CHECK_METRICS`` rows/keys
+that fails checksum validation (torn, tampered, or hand-edited — a corrupt
+reference must read as "fix the baseline", never as a phantom regression),
+one that parses as JSON but lacks the suite's ``CHECK_METRICS`` rows/keys
 (e.g. stale, or committed before a metric was added), or a filter that
 selects no suite at all (a typo would otherwise pass vacuously).
 
@@ -64,6 +71,12 @@ CHECK_METRICS = {
         # bool (int subclass): flipping to False reads as 0 < 1/tol
         "online_summary.claim_online_ge_robust_ge_stale": "higher",
     },
+    "faults": {
+        # bool: recovered-under-chaos results bit-identical to inline
+        "faults_recovery.identical_to_inline": "higher",
+        # supervised no-fault path vs raw path: must stay near 1.0
+        "faults_overhead.overhead_ratio": "lower",
+    },
 }
 
 #: --check exit codes: regression vs misconfiguration (missing baseline /
@@ -88,20 +101,43 @@ SUITE_MODULES = [
     ("compaction", "bench_compaction_space"),
     ("api", "bench_api"),
     ("online", "bench_online_drift"),
+    ("faults", "bench_faults"),
 ]
 
 
 def _load_baselines(suites, baseline_dir):
     """Snapshot every baseline BEFORE any suite runs (or --json rewrites
     them): with OUT == baseline dir the gate would otherwise compare each
-    fresh BENCH_<suite>.json against itself and pass vacuously."""
-    out = {}
+    fresh BENCH_<suite>.json against itself and pass vacuously.
+
+    Returns ``(baselines, invalid)``: baselines that exist but are torn
+    (unparseable JSON), unchecksummed, or checksum-invalid land in
+    ``invalid`` — the caller exits EXIT_MISCONFIGURED for those, because
+    diffing against a corrupt reference would report phantom regressions
+    (or worse, vacuously pass)."""
+    from repro.faults import CHECKSUM_KEY, checksum_ok
+    out, invalid = {}, []
     for key, _ in suites:
         path = os.path.join(baseline_dir, f"BENCH_{key}.json")
-        if os.path.exists(path):
+        if not os.path.exists(path):
+            continue
+        try:
             with open(path) as f:
-                out[key] = json.load(f)
-    return out
+                base = json.load(f)
+        except (json.JSONDecodeError, UnicodeDecodeError) as exc:
+            invalid.append(f"BENCH_{key}.json: unparseable "
+                           f"(torn write? {exc})")
+            continue
+        if not isinstance(base, dict) or CHECKSUM_KEY not in base:
+            invalid.append(f"BENCH_{key}.json: no '{CHECKSUM_KEY}' field "
+                           "(regenerate with --json and commit)")
+            continue
+        if not checksum_ok(base):
+            invalid.append(f"BENCH_{key}.json: checksum mismatch "
+                           "(corrupt, truncated, or hand-edited baseline)")
+            continue
+        out[key] = base
+    return out, invalid
 
 
 def _check_suite(key, rows, wall, base, tol):
@@ -170,17 +206,40 @@ def _jsonable(x):
 
 
 def _run_spec(args) -> None:
-    """``--spec FILE.json``: run one declarative experiment end-to-end."""
-    from repro.api import ExperimentSpec, run_experiment
+    """``--spec FILE.json``: run one declarative experiment end-to-end.
+
+    ``--run-dir`` / ``--resume`` override the subprocess backend's
+    persistence knobs (CLI wins over ``backend_params`` so one committed
+    spec file serves both fresh runs and resumes)."""
+    from repro.api import ExperimentSpec, get_backend, run_experiment
     with open(args.spec) as f:
         spec = ExperimentSpec.from_json(f.read())
+    backend = None
+    if args.run_dir or args.resume:
+        params = dict(spec.backend_params)
+        params["run_dir"] = args.run_dir
+        params["resume"] = args.resume
+        backend = get_backend(spec.backend, tuple(params.items()))
     print(f"# spec {args.spec!r} -> experiment {spec.name!r} "
-          f"(backend={spec.backend})", flush=True)
+          f"(backend={spec.backend}"
+          + (f", run_dir={args.run_dir!r}" if args.run_dir else "")
+          + (", resume" if args.resume else "") + ")", flush=True)
     print("name,us_per_call,derived")
-    report = run_experiment(spec)
+    report = run_experiment(spec, backend=backend)
     rows = report.rows()
     for row in rows:
         print(row.csv(), flush=True)
+    recovery = {k: int(v) for k, v in report.walls.items()
+                if k in ("resumed_trees", "shards_run", "shard_retries",
+                         "reshard_trees", "failed_trees")}
+    if recovery:
+        print("# recovery: " + " ".join(f"{k}={v}"
+                                        for k, v in sorted(recovery.items())),
+              flush=True)
+    for (cell, pol), err in sorted(report.failed_cells.items(),
+                                   key=lambda kv: str(kv[0])):
+        print(f"# WARNING unrecovered cell {cell} arm {pol!r}: "
+              + (err.splitlines()[-1][:200] if err else "?"), flush=True)
     print(f"# {spec.name} done in {report.wall_time_s:.1f}s", flush=True)
     if args.json:
         os.makedirs(args.json, exist_ok=True)
@@ -207,6 +266,12 @@ def main() -> None:
     parser.add_argument("--spec", metavar="FILE.json", default=None,
                         help="run one declarative repro.api.ExperimentSpec "
                              "and emit its report (honors --json)")
+    parser.add_argument("--run-dir", metavar="DIR", default=None,
+                        help="with --spec: persist per-shard results into "
+                             "DIR (atomic, checksummed) as they complete")
+    parser.add_argument("--resume", action="store_true",
+                        help="with --spec --run-dir: reuse valid persisted "
+                             "shard results, execute only the remainder")
     parser.add_argument("--baseline", metavar="DIR",
                         default=os.path.join(os.path.dirname(__file__), ".."),
                         help="baseline directory for --check "
@@ -221,6 +286,11 @@ def main() -> None:
             if not args.gated or key in CHECK_METRICS:
                 print(key)
         return
+    if args.resume and not args.run_dir:
+        parser.error("--resume requires --run-dir (the directory holding "
+                     "the persisted shard results)")
+    if (args.run_dir or args.resume) and not args.spec:
+        parser.error("--run-dir/--resume only apply to --spec runs")
     if args.spec:
         if args.check:
             parser.error("--spec and --check are mutually exclusive: the "
@@ -241,7 +311,14 @@ def main() -> None:
                 for key, name in selected_names]
     if args.json:
         os.makedirs(args.json, exist_ok=True)
-    baselines = _load_baselines(selected, args.baseline) if args.check else {}
+    baselines, invalid_baselines = \
+        _load_baselines(selected, args.baseline) if args.check else ({}, [])
+    if invalid_baselines:
+        # fail fast: running the suites first would waste minutes before
+        # telling the user their reference files need regenerating
+        print("error: invalid perf-gate baselines:\n  "
+              + "\n  ".join(invalid_baselines))
+        raise SystemExit(EXIT_MISCONFIGURED)
     print("name,us_per_call,derived")
     failures = 0
     all_regressions = []
@@ -262,6 +339,7 @@ def main() -> None:
         wall = time.time() - t0
         print(f"# {key} done in {wall:.1f}s", flush=True)
         if args.json:
+            from repro.faults import atomic_write_json
             payload = {
                 "suite": key,
                 "wall_time_s": round(wall, 3),
@@ -271,9 +349,7 @@ def main() -> None:
                           "derived": _jsonable(r.derived)} for r in rows],
             }
             path = os.path.join(args.json, f"BENCH_{key}.json")
-            with open(path, "w") as f:
-                json.dump(payload, f, indent=1, sort_keys=True,
-                          allow_nan=False)
+            atomic_write_json(path, payload)  # stamps the checksum field
             print(f"# wrote {path}", flush=True)
         if args.check and error is None:
             base = baselines.get(key)

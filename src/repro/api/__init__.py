@@ -32,9 +32,11 @@ from .report import (Report, Row, TreeProbe, costs_over_benchmark, delta_tp,
                      fmt, jsonable, timed)
 from .spec import (DesignSpec, DriftSpec, ExperimentSpec, TrialSpec,
                    WorkloadSpec)
+from repro.faults import FaultPlan, FaultSpec
 
 __all__ = [
     "ExperimentSpec", "WorkloadSpec", "DesignSpec", "TrialSpec", "DriftSpec",
+    "FaultSpec", "FaultPlan",
     "Report", "Row", "TreeProbe", "run_experiment",
     "compile_spec", "CompiledExperiment", "TuningPlan", "TrialPlan",
     "DriftPlan", "drift_schedule",
@@ -50,10 +52,16 @@ def run_experiment(spec: ExperimentSpec, backend=None) -> Report:
 
     ``backend`` overrides the spec's backend instance (e.g. a
     pre-configured :class:`SubprocessBackend`); by default the spec's
-    ``backend`` / ``backend_params`` fields select it."""
+    ``backend`` / ``backend_params`` fields select it.  ``spec.faults``
+    compiles into a :class:`repro.faults.FaultPlan` handed to the trial
+    executor — the deterministic chaos schedule the backend must recover
+    from (bit-identically to :class:`InlineBackend`; see
+    ``docs/faults.md``)."""
+    from repro.faults import FaultPlan
     cx = compile_spec(spec)
     if backend is None:
         backend = get_backend(spec.backend, spec.backend_params)
+    faults = FaultPlan.from_specs(spec.faults) if spec.faults else None
 
     t0 = time.time()
     solved = {design: backend.solve(plan)
@@ -67,7 +75,7 @@ def run_experiment(spec: ExperimentSpec, backend=None) -> Report:
 
     trial = cx.build_trial(report)
     if trial is not None:
-        backend.run_trial(trial, report)
+        backend.run_trial(trial, report, faults=faults)
     drift = cx.build_drift(report)
     if drift is not None:
         backend.run_drift(drift, report)

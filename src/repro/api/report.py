@@ -7,7 +7,15 @@ phase wall times — serialized in exactly the ``BENCH_<suite>.json`` schema
 that ``benchmarks/run.py --check`` gates on::
 
     {"suite": <name>, "wall_time_s": <float>, "error": null,
-     "rows": [{"name": ..., "us_per_call": ..., "derived": {...}}, ...]}
+     "rows": [{"name": ..., "us_per_call": ..., "derived": {...}}, ...],
+     "checksum": "sha256:..."}
+
+The ``checksum`` field (sha256 over the canonical payload minus itself,
+:func:`repro.faults.payload_checksum`) plus tmp-file + ``os.replace``
+writes make every emitted baseline crash-safe: a driver killed mid-write
+can no longer leave a torn ``BENCH_<suite>.json`` that the perf gate then
+trusts — ``--check`` validates the checksum and rejects an invalid
+baseline as *misconfigured* (exit 2), not a phantom regression.
 
 The row/formatting layer the benchmarks shared (:class:`Row`, strict-JSON
 coercion, benchmark-set cost evaluation, Delta-throughput) lives here now;
@@ -18,7 +26,6 @@ facade.
 from __future__ import annotations
 
 import dataclasses
-import json
 import math
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -155,6 +162,12 @@ class Report:
     #: -> repro.online.DriftArmResult
     drift: Dict[Tuple[int, str], Any] = dataclasses.field(
         default_factory=dict)
+    #: graceful degradation: trial trees whose shard exhausted every retry
+    #: and re-shard attempt, keyed like ``fleet``, valued with the final
+    #: error (worker stderr included) — the sweep completes with explicit
+    #: holes instead of crashing (``docs/faults.md``).
+    failed_cells: Dict[Tuple[Cell, str], str] = dataclasses.field(
+        default_factory=dict)
     walls: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     # -- accessors ----------------------------------------------------------
@@ -234,6 +247,18 @@ class Report:
                 segment_io=[round(r.avg_io_per_query, 3)
                             for r in res.records],
             ))
+        if self.failed_cells:
+            out.append(Row(
+                f"{name}_failed", 0.0,
+                failed=len(self.failed_cells),
+                cells=[f"w{w}" + ("" if rho is None else f"_rho{rho:g}")
+                       + f":{pol}"
+                       for (w, rho), pol in sorted(
+                           self.failed_cells, key=str)],
+                errors=[err.splitlines()[-1][:200] if err else ""
+                        for _, err in sorted(self.failed_cells.items(),
+                                             key=lambda kv: str(kv[0]))],
+            ))
         out.append(Row(f"{name}_walls", self.wall_time_s * 1e6,
                        **{k: round(v, 3) for k, v in self.walls.items()},
                        cells=len(self.cells),
@@ -244,19 +269,21 @@ class Report:
     def to_bench_payload(self, rows: Optional[List[Row]] = None,
                          error: Optional[str] = None) -> Dict[str, Any]:
         """Exactly the ``BENCH_<suite>.json`` schema ``run.py`` emits and
-        ``--check`` diffs (suite / wall_time_s / error / rows)."""
+        ``--check`` diffs (suite / wall_time_s / error / rows / checksum)."""
+        from repro.faults import stamp_checksum
         rows = self.rows() if rows is None else rows
-        return {
+        return stamp_checksum({
             "suite": self.spec.name,
             "wall_time_s": round(self.wall_time_s, 3),
             "error": error,
             "rows": [{"name": r.name,
                       "us_per_call": jsonable(round(float(r.us), 1)),
                       "derived": jsonable(r.derived)} for r in rows],
-        }
+        })
 
     def write_bench_json(self, path: str,
                          rows: Optional[List[Row]] = None) -> None:
-        with open(path, "w") as f:
-            json.dump(self.to_bench_payload(rows), f, indent=1,
-                      sort_keys=True, allow_nan=False)
+        """Atomic (tmp + ``os.replace``), checksummed baseline write — a
+        crash mid-save leaves the previous file, never a torn one."""
+        from repro.faults import atomic_write_json
+        atomic_write_json(path, self.to_bench_payload(rows))

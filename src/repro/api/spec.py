@@ -17,7 +17,12 @@ so the full experiment round-trips through JSON (``to_json`` /
 
 The execution *backend* is an axis of the spec (``inline`` | ``sharded`` |
 ``subprocess``, see :mod:`repro.api.backends`), so the same experiment
-scales from a laptop to a device mesh or a worker pool unchanged.
+scales from a laptop to a device mesh or a worker pool unchanged.  So is
+the *failure process*: ``faults`` carries a tuple of
+:class:`repro.faults.FaultSpec` (deterministic, seeded chaos injection —
+worker crashes, hangs, slowdowns, corrupted result pickles, torn artifact
+writes), making a chaos scenario a JSON-round-trippable spec like
+everything else.
 """
 
 from __future__ import annotations
@@ -25,6 +30,8 @@ from __future__ import annotations
 import dataclasses
 import json
 from typing import Any, Dict, Optional, Tuple
+
+from repro.faults import FaultSpec
 
 Pairs = Tuple[Tuple[str, Any], ...]
 
@@ -273,7 +280,16 @@ class ExperimentSpec:
     value) pairs (the reduced-scale Table-5 systems); ``backend`` selects
     the execution backend (:data:`repro.api.backends.BACKENDS`) and
     ``backend_params`` its constructor kwargs (e.g. ``(("workers", 4),)``
-    for ``subprocess``)."""
+    for ``subprocess`` — which also accepts the fault-tolerance knobs
+    ``max_retries`` / ``backoff_s`` / ``timeout_s`` / ``retry_seed`` /
+    ``reshard`` / ``run_dir`` / ``resume``).
+
+    ``faults`` is the injected failure schedule
+    (:class:`repro.faults.FaultSpec` tuple): worker-scoped faults fire in
+    the ``subprocess`` backend's workers, ``torn_write`` faults in the
+    artifact persistence path.  The backend contract is unchanged by any
+    fault schedule — recovered results must be bit-identical to
+    :class:`repro.api.backends.InlineBackend` (see ``docs/faults.md``)."""
 
     name: str
     workload: WorkloadSpec
@@ -283,8 +299,13 @@ class ExperimentSpec:
     system: Pairs = ()
     backend: str = "inline"
     backend_params: Pairs = ()
+    faults: Tuple[FaultSpec, ...] = ()
 
     def __post_init__(self):
+        for f in self.faults:
+            if not isinstance(f, FaultSpec):
+                raise ValueError(f"faults entries must be FaultSpec, "
+                                 f"got {type(f).__name__}: {f!r}")
         if self.drift is not None:
             need_robust = {"static_robust", "online"} & set(self.drift.arms)
             if need_robust and not self.workload.rhos \
@@ -314,11 +335,16 @@ class ExperimentSpec:
         ds = {k: _tupled(v) for k, v in d.pop("design", {}).items()}
         tr = d.pop("trial", None)
         dr = d.pop("drift", None)
+        fa = d.pop("faults", ())
         return cls(workload=WorkloadSpec(**wl), design=DesignSpec(**ds),
                    trial=TrialSpec(**{k: _tupled(v) for k, v in tr.items()})
                    if tr is not None else None,
                    drift=DriftSpec(**{k: _tupled(v) for k, v in dr.items()})
                    if dr is not None else None,
+                   faults=tuple(
+                       f if isinstance(f, FaultSpec)
+                       else FaultSpec(**{k: _tupled(v) for k, v in f.items()})
+                       for f in fa),
                    **{k: _tupled(v) for k, v in d.items()})
 
     @classmethod

@@ -168,8 +168,35 @@ class CheckpointStore:
 
     # -- save / restore ----------------------------------------------------
 
+    @staticmethod
+    def _write_array(path: pathlib.Path, arr: np.ndarray) -> None:
+        """One tensor file, atomically: serialize to memory, then temp +
+        ``os.replace`` — a crash mid-save can leave an *unreferenced* file,
+        never a torn ``.npy`` at a path the manifest points to."""
+        import io
+        from repro.faults import atomic_write_bytes
+        buf = io.BytesIO()
+        np.save(buf, arr)
+        atomic_write_bytes(str(path), buf.getvalue())
+
+    @staticmethod
+    def _write_npz(path: pathlib.Path, arrays: Dict[str, np.ndarray]) -> None:
+        import io
+        from repro.faults import atomic_write_bytes
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        atomic_write_bytes(str(path), buf.getvalue())
+
     def save(self, step: int, params: Any, opt_state: Any = None,
              data_state: Optional[Dict[str, int]] = None) -> None:
+        """Write one checkpoint crash-safely.
+
+        Ordering is the durability contract (``docs/faults.md``): every
+        tensor file and per-step manifest entry lands *before* the
+        ``latest`` pointer flips, and each file write is atomic — so a save
+        interrupted anywhere leaves ``latest_step()`` on the previous fully
+        written checkpoint, which remains restorable, and never leaves a
+        torn tensor file at a manifest-referenced path."""
         ckdir = self.root / f"step_{step:08d}"
         ckdir.mkdir(parents=True, exist_ok=True)
         flat, treedef = jax.tree_util.tree_flatten_with_path(params)
@@ -181,7 +208,7 @@ class CheckpointStore:
                                       "int64", "uint32", "uint64", "bool"):
                 arr = arr.astype(np.float32)  # bf16 etc: store widened
             fname = hashlib.md5(name.encode()).hexdigest() + ".npy"
-            np.save(ckdir / fname, arr)
+            self._write_array(ckdir / fname, arr)
             self._mput(f"tensor/{step}/{name}", {
                 "file": fname, "shape": list(arr.shape),
                 "dtype": str(arr.dtype)})
@@ -195,9 +222,10 @@ class CheckpointStore:
                 a = np.asarray(jax.device_get(l))
                 return a.astype(np.float32) if a.dtype.name == "bfloat16" \
                     else a
-            np.savez(ckdir / "opt_state.npz", **{
+            self._write_npz(ckdir / "opt_state.npz", {
                 f"s{i}": widen(l)
                 for i, l in enumerate(jax.tree.leaves(opt_state))})
+        # the commit point: everything above must already be durable
         self._mput("latest", {"step": step})
         self.manifest.flush()
 

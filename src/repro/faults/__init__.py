@@ -1,0 +1,33 @@
+"""Deterministic fault injection + the crash-safe execution substrate.
+
+Three stdlib-only modules (importable from jax-free worker processes):
+
+* :mod:`repro.faults.spec` — :class:`FaultSpec` / :class:`FaultPlan`, the
+  seeded chaos schedule carried on ``ExperimentSpec.faults``;
+* :mod:`repro.faults.artifacts` — atomic writes + content checksums for
+  every persisted artifact (shard results, BENCH baselines, checkpoints);
+* :mod:`repro.faults.retry` — :class:`RetryPolicy` (seeded backoff,
+  per-attempt timeouts) and :class:`ShardSupervisor` (dead-worker
+  membership + elastic re-sharding), the :mod:`repro.launch.elastic`
+  pattern at sweep granularity.
+
+See ``docs/faults.md`` for the taxonomy, the determinism contract, and the
+resume workflow.
+"""
+
+from .artifacts import (CHECKSUM_KEY, TornWriteError, atomic_write_bytes,
+                        atomic_write_json, canonical_json, checksum_ok,
+                        dump_job, load_checked_json, load_job,
+                        payload_checksum, stamp_checksum)
+from .retry import RetryPolicy, ShardSupervisor
+from .spec import (ARTIFACT_KINDS, HANG_SLEEP_S, KINDS, WORKER_KINDS,
+                   FaultAction, FaultPlan, FaultSpec, u01)
+
+__all__ = [
+    "FaultSpec", "FaultPlan", "FaultAction",
+    "KINDS", "WORKER_KINDS", "ARTIFACT_KINDS", "HANG_SLEEP_S", "u01",
+    "RetryPolicy", "ShardSupervisor",
+    "CHECKSUM_KEY", "TornWriteError", "atomic_write_bytes",
+    "atomic_write_json", "canonical_json", "checksum_ok", "dump_job",
+    "load_checked_json", "load_job", "payload_checksum", "stamp_checksum",
+]

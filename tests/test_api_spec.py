@@ -174,13 +174,16 @@ def test_report_bench_payload_schema():
                                        nominal=True, bench_n=200))
     report = run_experiment(spec)
     payload = report.to_bench_payload()
-    assert set(payload) == {"suite", "wall_time_s", "error", "rows"}
+    assert set(payload) == {"suite", "wall_time_s", "error", "rows",
+                            "checksum"}
     assert payload["suite"] == "t"
     assert payload["error"] is None
     for row in payload["rows"]:
         assert set(row) == {"name", "us_per_call", "derived"}
     import json
     json.dumps(payload, allow_nan=False)     # strict-JSON clean
+    from repro.faults import checksum_ok
+    assert checksum_ok(payload)              # self-validating baseline
     # delta-throughput metric surface
     d = report.delta_tp_vs_nominal(0, 1.0)
     assert d.shape == (200,)

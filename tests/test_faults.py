@@ -1,0 +1,511 @@
+"""Chaos suite: deterministic fault injection and the recovery invariant.
+
+The contract under test (``docs/faults.md``): for ANY injected fault
+schedule, every result the hardened subprocess backend *recovers* is
+bit-identical to the inline reference — retries, elastic re-sharding, and
+resume move work, never change it — and when recovery is exhausted the
+sweep degrades to explicit ``Report.failed_cells`` instead of crashing.
+Artifacts (per-shard results, BENCH baselines, checkpoints) must be
+crash-safe: atomic writes, content checksums, loaders that reject torn
+files.
+
+``REPRO_CHAOS_SEED`` (CI runs a small seed matrix) re-seeds every
+probabilistic fault draw and backoff jitter: the *schedules* differ per
+seed, the invariants must hold for all of them.
+
+Trial sizes are tiny (thousands of keys, hundreds of queries); the wall
+cost is dominated by worker process startup and the deliberate
+hang-timeout test.
+"""
+
+import dataclasses
+import glob
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import (DesignSpec, ExperimentSpec, FaultSpec, TrialSpec,
+                       WorkloadSpec, run_experiment)
+from repro.faults import (CHECKSUM_KEY, FaultPlan, RetryPolicy,
+                          ShardSupervisor, TornWriteError, atomic_write_bytes,
+                          atomic_write_json, checksum_ok, dump_job,
+                          load_checked_json, load_job, payload_checksum, u01)
+
+#: CI chaos-leg seed matrix: export REPRO_CHAOS_SEED=N to re-roll every
+#: fault draw and backoff jitter.  Invariants must hold for every seed.
+SEED = int(os.environ.get("REPRO_CHAOS_SEED", "0"))
+
+SESSIONS = ((0.05, 0.85, 0.05, 0.05),)
+
+
+def _spec(**kw) -> ExperimentSpec:
+    base = dict(
+        name="chaos",
+        workload=WorkloadSpec(indices=(7, 11), rhos=(), nominal=True,
+                              bench_n=0),
+        design=DesignSpec(fixed=(6.0, 4.0, 1.0)),
+        trial=TrialSpec(n_keys=4000, n_queries=300, sessions=SESSIONS),
+        system=(("N", 8000.0), ("bits_per_entry", 6.0), ("max_T", 20.0)),
+    )
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def _sub_params(**kw):
+    base = dict(workers=2, max_retries=2, backoff_s=0.01, timeout_s=120.0,
+                retry_seed=SEED)
+    base.update(kw)
+    return tuple(base.items())
+
+
+@pytest.fixture(scope="module")
+def inline_report():
+    """The reference run every chaos scenario must reproduce exactly."""
+    return run_experiment(_spec())
+
+
+def _assert_identical(inline, chaos):
+    """The recovery invariant, at full strength: per-session IOStats and
+    the post-trial engine probes are equal, not just summary statistics."""
+    assert set(chaos.fleet) == set(inline.fleet)
+    for key in inline.fleet:
+        for a, b in zip(inline.fleet[key], chaos.fleet[key]):
+            assert a.io == b.io
+            assert a.avg_io_per_query == b.avg_io_per_query
+        assert inline.probes[key] == chaos.probes[key]
+    assert not chaos.failed_cells
+
+
+# ---------------------------------------------------------------------------
+# Fault specs and plans
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(kind="meteor")
+    with pytest.raises(ValueError, match="outside"):
+        FaultSpec(kind="crash", p=1.5)
+    with pytest.raises(ValueError, match="max_hits"):
+        FaultSpec(kind="crash", max_hits=-1)
+    with pytest.raises(ValueError, match="delay_s"):
+        FaultSpec(kind="slow", delay_s=-0.1)
+
+
+def test_fault_plan_semantics():
+    plan = FaultPlan.from_specs((
+        FaultSpec(kind="crash", shards=(1,), max_hits=2, seed=SEED),
+        FaultSpec(kind="slow", delay_s=0.5, max_hits=1, seed=SEED),
+    ))
+    assert plan and not FaultPlan(())
+    # shard filter + first-match-wins: shard 1 crashes, others slow
+    assert plan.worker_fault(1, 0).kind == "crash"
+    assert plan.worker_fault(0, 0).kind == "slow"
+    assert plan.worker_fault(0, 0).delay_s == 0.5
+    # max_hits retirement: attempts beyond the budget draw nothing
+    assert plan.worker_fault(1, 1).kind == "crash"  # within max_hits=2
+    assert plan.worker_fault(1, 2) is None          # both specs retired
+    assert plan.worker_fault(0, 1) is None
+    # pure-hash draws: decisions are reproducible and order-independent
+    again = FaultPlan.from_specs(plan.specs)
+    coords = [(s, a) for s in range(4) for a in range(3)]
+    assert [plan.worker_fault(s, a) for s, a in coords] == \
+           [again.worker_fault(s, a) for s, a in reversed(coords)][::-1]
+    # worker kinds never tear writes; torn_write never fires for workers
+    assert not plan.tears_write("job_x.pkl")
+    tear = FaultPlan.from_specs((FaultSpec(kind="torn_write",
+                                           match="job_", seed=SEED),))
+    assert tear.tears_write("job_x.pkl") and not tear.tears_write("b.json")
+    assert tear.worker_fault(0, 0) is None
+
+
+def test_u01_is_uniform_ish_and_stable():
+    draws = [u01(SEED, "x", i) for i in range(2000)]
+    assert all(0.0 <= d < 1.0 for d in draws)
+    assert abs(np.mean(draws) - 0.5) < 0.05
+    assert draws == [u01(SEED, "x", i) for i in range(2000)]
+
+
+def test_fault_specs_ride_the_experiment_spec_json():
+    spec = _spec(backend="subprocess",
+                 faults=(FaultSpec(kind="crash", shards=(0,), p=0.5,
+                                   seed=SEED),
+                         FaultSpec(kind="torn_write", match="job_")))
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.faults[0].shards == (0,)        # tuples survive the trip
+    with pytest.raises(ValueError, match="FaultSpec"):
+        _spec(faults=({"kind": "crash"},))      # dicts only via from_dict
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe artifacts
+# ---------------------------------------------------------------------------
+
+def test_atomic_json_checksum_roundtrip(tmp_path):
+    path = str(tmp_path / "BENCH_x.json")
+    payload = atomic_write_json(path, {"suite": "x", "rows": [1, 2]})
+    assert checksum_ok(payload)
+    assert load_checked_json(path) == payload
+    # checksum covers content, not formatting, and excludes itself
+    assert payload_checksum(payload) == payload[CHECKSUM_KEY]
+    # tamper -> loader refuses
+    tampered = dict(payload, rows=[1, 3])
+    with open(path, "w") as f:
+        json.dump(tampered, f)
+    with pytest.raises(ValueError, match="checksum mismatch"):
+        load_checked_json(path)
+    with open(path, "w") as f:
+        json.dump({"suite": "x"}, f)
+    with pytest.raises(ValueError, match="no 'checksum'"):
+        load_checked_json(path)
+
+
+def test_atomic_write_leaves_no_tmp(tmp_path):
+    path = tmp_path / "a.bin"
+    atomic_write_bytes(str(path), b"x" * 1000)
+    assert path.read_bytes() == b"x" * 1000
+    assert os.listdir(tmp_path) == ["a.bin"]    # tmp replaced, not leaked
+
+
+def test_torn_write_fault_and_job_loader(tmp_path):
+    path = str(tmp_path / "job_a.pkl")
+    dump_job(path, {"plan": "d", "trees": {0: (1, 2)}})
+    assert load_job(path) == {"plan": "d", "trees": {0: (1, 2)}}
+    # injected torn write: truncated bytes at the FINAL path + an error
+    tear = FaultPlan.from_specs((FaultSpec(kind="torn_write", match="job_",
+                                           seed=SEED),))
+    with pytest.raises(TornWriteError):
+        dump_job(path, {"plan": "d", "trees": {0: (3, 4)}}, fault=tear)
+    # the torn file is detected, never trusted
+    assert load_job(path) is None
+    assert load_job(str(tmp_path / "absent.pkl")) is None
+    (tmp_path / "garbage.pkl").write_bytes(b"\x00\x01nonsense")
+    assert load_job(str(tmp_path / "garbage.pkl")) is None
+
+
+# ---------------------------------------------------------------------------
+# Retry policy + shard supervision (pure units)
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_backoff():
+    pol = RetryPolicy(max_retries=3, backoff_s=0.1, seed=SEED)
+    assert pol.attempts() == 4
+    assert pol.delay(0, 0) == 0.0
+    d1, d2, d3 = (pol.delay(0, a) for a in (1, 2, 3))
+    assert 0.05 <= d1 < 0.15          # backoff * [0.5, 1.5) jitter
+    assert 0.10 <= d2 < 0.30
+    assert 0.20 <= d3 < 0.60
+    assert pol.delay(0, 1) == d1      # deterministic
+    assert pol.delay(1, 1) != d1      # de-synchronized across shards
+
+
+def test_shard_supervisor_reassign():
+    sup = ShardSupervisor()
+    sup.record_failure(1, "boom")
+    sup.record_failure(1, "boom again")
+    sup.mark_dead(1)
+    sup.mark_dead(1)
+    sup.mark_completed(0)
+    assert sup.dead == [1] and sup.retries == 2
+    assert sup.last_error(1) == "boom again"
+    assert sup.last_error(5) == "<no error recorded>"
+    # sorted round-robin, capacity-bounded, no empty jobs
+    assert sup.reassign([9, 3, 5], capacity=2) == [[3, 9], [5]]
+    assert sup.reassign([3], capacity=8) == [[3]]
+    assert sup.reassign([], capacity=4) == []
+
+
+# ---------------------------------------------------------------------------
+# The recovery invariant, end-to-end
+# ---------------------------------------------------------------------------
+
+def test_crash_retry_bit_identical(inline_report):
+    chaos = run_experiment(_spec(
+        backend="subprocess", backend_params=_sub_params(),
+        faults=(FaultSpec(kind="crash", shards=(0,), max_hits=1,
+                          seed=SEED),)))
+    assert chaos.walls["shard_retries"] >= 1
+    _assert_identical(inline_report, chaos)
+
+
+def test_corrupt_and_slow_bit_identical(inline_report):
+    chaos = run_experiment(_spec(
+        backend="subprocess", backend_params=_sub_params(),
+        faults=(FaultSpec(kind="corrupt", shards=(1,), max_hits=1,
+                          seed=SEED),
+                FaultSpec(kind="slow", shards=(0,), delay_s=0.2,
+                          max_hits=1, seed=SEED))))
+    assert chaos.walls["shard_retries"] >= 1    # the corrupt result
+    _assert_identical(inline_report, chaos)
+
+
+def test_hung_worker_times_out_and_recovers(inline_report):
+    chaos = run_experiment(_spec(
+        backend="subprocess",
+        backend_params=_sub_params(timeout_s=10.0),
+        faults=(FaultSpec(kind="hang", shards=(1,), max_hits=1,
+                          seed=SEED),)))
+    assert chaos.walls["shard_retries"] >= 1
+    _assert_identical(inline_report, chaos)
+
+
+def test_probabilistic_chaos_storm_bit_identical(inline_report):
+    """Mixed-kind storm with p < 1: the schedule varies with
+    REPRO_CHAOS_SEED, the invariant must not.  max_hits=1 bounds every
+    population to first attempts, so the retry budget always wins."""
+    chaos = run_experiment(_spec(
+        backend="subprocess", backend_params=_sub_params(max_retries=3),
+        faults=(FaultSpec(kind="crash", p=0.6, max_hits=1, seed=SEED),
+                FaultSpec(kind="corrupt", p=0.6, max_hits=1,
+                          seed=SEED + 1),
+                FaultSpec(kind="slow", p=0.6, delay_s=0.1, max_hits=1,
+                          seed=SEED + 2))))
+    _assert_identical(inline_report, chaos)
+
+
+def test_dead_shard_resharded_onto_survivors(inline_report):
+    """A permanently dead worker slot: every retry on shard 1 crashes, so
+    its trees regroup onto fresh slots (which re-roll the fault draws) —
+    the elastic.py remesh pattern at sweep granularity."""
+    chaos = run_experiment(_spec(
+        backend="subprocess", backend_params=_sub_params(max_retries=1),
+        faults=(FaultSpec(kind="crash", shards=(1,), max_hits=99,
+                          seed=SEED),)))
+    assert chaos.walls["reshard_trees"] >= 1
+    assert chaos.walls["shards_run"] >= 3       # 2 first-round + re-shard
+    _assert_identical(inline_report, chaos)
+
+
+def test_systemic_failure_degrades_gracefully():
+    """Every shard dead on every attempt: no survivors means re-sharding
+    is pointless (the elastic remesh rule), so the sweep completes with
+    explicit failed_cells — crash-free — and the error carries the
+    worker's stderr (the injected-crash marker)."""
+    chaos = run_experiment(_spec(
+        backend="subprocess", backend_params=_sub_params(max_retries=1),
+        faults=(FaultSpec(kind="crash", max_hits=99, seed=SEED),)))
+    assert not chaos.fleet
+    assert len(chaos.failed_cells) == 2
+    for err in chaos.failed_cells.values():
+        assert "InjectedWorkerCrash" in err      # stderr surfaced
+        assert "exited 17" in err
+    # the report still renders and serializes
+    rows = chaos.rows()
+    failed_rows = [r for r in rows if r.name.endswith("_failed")]
+    assert len(failed_rows) == 1
+    assert failed_rows[0].derived["failed"] == 2
+    payload = chaos.to_bench_payload()
+    json.dumps(payload, allow_nan=False)
+    assert checksum_ok(payload)
+
+
+def test_worker_stderr_attached_to_errors():
+    """Satellite of the hardening: a failing worker's stderr reaches the
+    recorded error instead of vanishing (the old check=True behavior)."""
+    chaos = run_experiment(_spec(
+        backend="subprocess", backend_params=_sub_params(max_retries=0),
+        faults=(FaultSpec(kind="crash", max_hits=99, seed=SEED),)))
+    assert chaos.failed_cells
+    for err in chaos.failed_cells.values():
+        assert "stderr:" in err and "InjectedWorkerCrash" in err
+
+
+# ---------------------------------------------------------------------------
+# Persistence + resume
+# ---------------------------------------------------------------------------
+
+def test_resume_reuses_completed_shards(tmp_path, inline_report):
+    run_dir = str(tmp_path / "run")
+    # run 1: shard 1 permanently dead, no re-sharding -> partial sweep,
+    # shard 0's results persisted as they completed
+    r1 = run_experiment(_spec(
+        backend="subprocess",
+        backend_params=_sub_params(max_retries=1, reshard=False,
+                                   run_dir=run_dir),
+        faults=(FaultSpec(kind="crash", shards=(1,), max_hits=99,
+                          seed=SEED),)))
+    assert r1.failed_cells and len(r1.fleet) == 1
+    assert glob.glob(os.path.join(run_dir, "job_*.pkl"))
+    # run 2: same plan, no faults, resume -> only the missing tree runs
+    r2 = run_experiment(_spec(
+        backend="subprocess",
+        backend_params=_sub_params(run_dir=run_dir, resume=True)))
+    assert r2.walls["resumed_trees"] == 1
+    assert r2.walls["shards_run"] == 1          # the shard-execution count
+    _assert_identical(inline_report, r2)
+    # run 3: everything persisted -> zero shards execute
+    r3 = run_experiment(_spec(
+        backend="subprocess",
+        backend_params=_sub_params(run_dir=run_dir, resume=True)))
+    assert r3.walls["resumed_trees"] == 2
+    assert r3.walls["shards_run"] == 0
+    _assert_identical(inline_report, r3)
+
+
+def test_resume_ignores_other_plans_and_torn_jobs(tmp_path, inline_report):
+    run_dir = str(tmp_path / "run")
+    run_experiment(_spec(
+        backend="subprocess",
+        backend_params=_sub_params(run_dir=run_dir)))
+    jobs = sorted(glob.glob(os.path.join(run_dir, "job_*.pkl")))
+    assert len(jobs) == 2
+    # tear one persisted job + plant one from a foreign plan
+    with open(jobs[0], "rb") as f:
+        data = f.read()
+    with open(jobs[0], "wb") as f:
+        f.write(data[: len(data) // 2])
+    dump_job(os.path.join(run_dir, "job_feedbeef_cafe.pkl"),
+             {"plan": "feedbeef", "trees": {0: ("wrong", "wrong")}})
+    r = run_experiment(_spec(
+        backend="subprocess",
+        backend_params=_sub_params(run_dir=run_dir, resume=True)))
+    # torn job -> its tree re-executed; foreign plan -> never consumed
+    assert r.walls["resumed_trees"] == 1
+    assert r.walls["shards_run"] == 1
+    _assert_identical(inline_report, r)
+
+
+def test_run_cli_run_dir_and_resume(tmp_path):
+    """The operator workflow: run.py --spec --run-dir, kill, --resume."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    spec = _spec(name="fcli", backend="subprocess",
+                 backend_params=_sub_params())
+    spec_path = tmp_path / "spec.json"
+    spec_path.write_text(spec.to_json())
+    run_dir = str(tmp_path / "run")
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo, "src"))
+
+    def cli(*extra):
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--spec",
+             str(spec_path), "--run-dir", run_dir, *extra],
+            cwd=repo, env=env, stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT, timeout=600)
+        text = out.stdout.decode()
+        assert out.returncode == 0, text
+        return text
+
+    first = cli()
+    assert glob.glob(os.path.join(run_dir, "job_*.pkl"))
+    second = cli("--resume")
+    assert "shards_run=0" in second and "resumed_trees=2" in second
+    rows = lambda t: [l for l in t.splitlines()
+                      if l.startswith("fcli_w")
+                      and not l.startswith("fcli_walls")]
+    assert rows(first) == rows(second) and rows(first)
+    # --resume without --run-dir is a usage error, not a silent fresh run
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--spec", str(spec_path),
+         "--resume"], cwd=repo, env=env, capture_output=True, timeout=120)
+    assert out.returncode == 2
+    assert b"--run-dir" in out.stderr
+
+
+# ---------------------------------------------------------------------------
+# Perf-gate baseline validation (exit 2, not phantom regressions)
+# ---------------------------------------------------------------------------
+
+def test_check_rejects_invalid_baselines(tmp_path):
+    from benchmarks.run import EXIT_MISCONFIGURED, _load_baselines
+    suites = [("x", "mod_x"), ("y", "mod_y"), ("z", "mod_z")]
+    assert EXIT_MISCONFIGURED == 2
+    # x: torn JSON; y: checksum mismatch; z: pre-checksum legacy
+    (tmp_path / "BENCH_x.json").write_text('{"suite": "x", "wall')
+    good = atomic_write_json(str(tmp_path / "BENCH_y.json"),
+                             {"suite": "y", "wall_time_s": 1.0, "rows": []})
+    bad = dict(good, wall_time_s=2.0)
+    (tmp_path / "BENCH_y.json").write_text(json.dumps(bad))
+    (tmp_path / "BENCH_z.json").write_text(
+        json.dumps({"suite": "z", "wall_time_s": 1.0, "rows": []}))
+    baselines, invalid = _load_baselines(suites, str(tmp_path))
+    assert baselines == {} and len(invalid) == 3
+    assert any("unparseable" in msg for msg in invalid)
+    assert any("checksum mismatch" in msg for msg in invalid)
+    assert any("no 'checksum'" in msg for msg in invalid)
+    # a valid baseline loads
+    atomic_write_json(str(tmp_path / "BENCH_x.json"),
+                      {"suite": "x", "wall_time_s": 1.0, "rows": []})
+    baselines, invalid = _load_baselines(suites[:1], str(tmp_path))
+    assert set(baselines) == {"x"} and not invalid
+
+
+def test_committed_baselines_are_checksum_valid():
+    """Every committed BENCH_<suite>.json must pass the validation the
+    gate now performs — a regression here means someone hand-edited one."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    paths = sorted(glob.glob(os.path.join(repo, "BENCH_*.json")))
+    assert paths, "no committed baselines found"
+    for path in paths:
+        load_checked_json(path)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint crash-safety
+# ---------------------------------------------------------------------------
+
+def _tiny_params():
+    return {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.ones(4, np.float32)}
+
+
+def test_checkpoint_interrupted_save_keeps_latest(tmp_path, monkeypatch):
+    """A save that dies mid-tensor must not clobber the previous
+    checkpoint: ``latest_step`` still points at it and it restores."""
+    from repro.checkpoint.store import CheckpointStore
+    store = CheckpointStore.create(str(tmp_path))
+    params = _tiny_params()
+    store.save(1, params, data_state={"batch": 10})
+    assert store.latest_step() == 1
+
+    real = CheckpointStore._write_array     # plain function via descriptor
+    calls = {"n": 0}
+
+    def dying(path, arr):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise OSError("disk gone (injected)")
+        real(path, arr)
+
+    monkeypatch.setattr(CheckpointStore, "_write_array",
+                        staticmethod(dying))
+    p2 = {k: v + 1 for k, v in params.items()}
+    with pytest.raises(OSError, match="injected"):
+        store.save(2, p2, data_state={"batch": 20})
+    # the commit point never flipped
+    assert store.latest_step() == 1
+    restored, meta = store.restore(params)
+    assert meta["data_state"] == {"batch": 10}
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(restored[k]), params[k])
+    # recovery: a later complete save commits normally
+    monkeypatch.setattr(CheckpointStore, "_write_array",
+                        staticmethod(real))
+    store.save(2, p2, data_state={"batch": 20})
+    assert store.latest_step() == 2
+    restored, meta = store.restore(params)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), p2["w"])
+
+
+def test_checkpoint_tensor_files_atomic(tmp_path):
+    """Tensor and opt-state files go through the atomic writer: the
+    checkpoint dir holds only final artifacts, every one loadable."""
+    from repro.checkpoint.store import CheckpointStore
+    store = CheckpointStore.create(str(tmp_path))
+    params = _tiny_params()
+    store.save(3, params, opt_state=[np.zeros(4, np.float32)])
+    ckdir = tmp_path / "step_00000003"
+    files = sorted(os.listdir(ckdir))
+    assert len(files) == 3 and not any(f.endswith(".tmp") for f in files)
+    for f in files:
+        if f.endswith(".npy"):
+            np.load(ckdir / f)
+    z = np.load(ckdir / "opt_state.npz")
+    np.testing.assert_array_equal(z["s0"], np.zeros(4, np.float32))
+    opt = store.restore_opt_state([np.empty(4, np.float32)])
+    np.testing.assert_array_equal(np.asarray(opt[0]),
+                                  np.zeros(4, np.float32))

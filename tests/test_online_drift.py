@@ -284,7 +284,17 @@ def test_remote_backend_is_registered_stub():
     backend = api.get_backend(spec.backend, spec.backend_params)
     assert backend.name == "remote" and backend.scheduler == "slurm"
     job = backend.serialize_job(spec)
-    assert api.ExperimentSpec.from_json(job) == spec   # spec-serializing
+    # v2 envelope: checksummed spec + the retry/timeout policy block
+    import json as _json
+    env = _json.loads(job)
+    assert env["version"] == 2 and env["scheduler"] == "slurm"
+    assert set(env["retry"]) == {"max_retries", "backoff_s", "timeout_s",
+                                 "seed"}
+    spec_back, retry = type(backend).deserialize_job(job)
+    assert spec_back == spec and retry["timeout_s"] == 900.0
+    env["queue"] = "tampered"
+    with pytest.raises(ValueError, match="checksum"):
+        type(backend).deserialize_job(_json.dumps(env))
     with pytest.raises(NotImplementedError, match="scheduling stub"):
         api.run_experiment(spec)
 
