@@ -1,0 +1,204 @@
+"""Kernel-tier microbenchmarks: reference vs fused vs Pallas paths.
+
+One row per kernel family (PR 7's fused data plane):
+
+* ``kernels_point_read`` — the per-level fused batched point read
+  (Bloom probe + fence location + per-run binary search).  The gated
+  comparison is the production fused numpy path against the eager jnp
+  reference (``kernels.point_read.ref``) on the same level arenas; the
+  Pallas leg runs in interpret mode off-TPU and is reported unguarded
+  (interpret timings measure the Python evaluator, not the kernel).
+* ``kernels_dual_solve`` — the robust tuner's warm dual solve.  Gated:
+  the cached-point fused solve (12 g-evaluations) vs the two-point
+  reference (16 g-evaluations), both jit-compiled over the same lane
+  batch via ``dual_solve_warm_batch``.
+* ``kernels_merge`` — the compaction k-way stable merge.  Reported
+  (numpy argsort vs jnp rank-merge vs Pallas merge-path), not gated:
+  on CPU the argsort baseline is already memory-bound and the jnp path
+  pays eager-dispatch overhead by design.
+
+Every row also carries *effective* achieved bytes/s, derived from the
+engine's own I/O accounting (filter words probed + pages read for the
+point read; inputs + outputs for the merge; cost matrices for the
+solve).  ``bench_roofline`` reuses :func:`measure_cells` to place these
+against a measured host-copy bandwidth ceiling.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from .common import Row
+
+# Modest sizes: the Pallas legs run under the interpret-mode Python
+# evaluator off-TPU, so every grid step is host work.
+PR_BATCH = 512          # point-read query batch
+DS_LANES = 1024         # dual-solve lane count
+DS_COSTS = 64           # workloads per lane cost vector
+DS_STEPS = 12           # chained warm solves per call (the tuner's Adam
+                        # loop re-solves every step with the warm llam)
+MG_SIZES = (20_000, 15_000, 5_000)   # newest-first run lengths
+
+
+def _best_us(fn: Callable[[], object], repeats: int = 5,
+             warmup: int = 1) -> float:
+    """Best-of-N wall time in microseconds (min: least-noise estimator)."""
+    for _ in range(warmup):
+        fn()
+    best = math.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _point_read_fixture():
+    """A populated tree level + query batch (half present, half absent)."""
+    from repro.lsm import EngineConfig, LSMTree
+    tree = LSMTree(EngineConfig(T=4, K=(3, 3, 3), buf_entries=256,
+                                expected_entries=30_000,
+                                mfilt_bits_per_entry=8.0))
+    rng = np.random.default_rng(7)
+    keys = rng.choice(1 << 40, 30_000, replace=False).astype(np.uint64)
+    tree.put_batch(keys, [int(k) % 997 for k in keys])
+    tree.flush()
+    # Prefer a multi-run level (exercises newest->oldest masking), then
+    # the biggest one.
+    lv = max((lv for lv in tree.store.levels if lv.num_runs),
+             key=lambda lv: (lv.num_runs, len(lv.keys)))
+    q = np.concatenate([
+        rng.choice(keys, PR_BATCH // 2, replace=False),
+        rng.choice(1 << 40, PR_BATCH - PR_BATCH // 2).astype(np.uint64),
+    ]).astype(np.uint64)
+    return tree, lv, q
+
+
+def _point_read_cell() -> Dict[str, float]:
+    from repro.kernels.point_read.ops import point_read_level_arrays
+    from repro.lsm.read_path import point_read_level_numpy
+
+    tree, lv, q = _point_read_fixture()
+    pack = lv.pack
+    starts = np.asarray(lv.starts, np.int64)
+    n_bits = np.asarray(pack.n_bits, np.uint64)
+    ks = np.asarray(pack.ks, np.int64)
+
+    def via_arrays(impl):
+        return point_read_level_arrays(q, lv.keys, lv.vals, starts,
+                                       pack.words, n_bits, ks, lv.min_keys,
+                                       lv.max_keys, impl=impl)
+
+    us_numpy = _best_us(lambda: point_read_level_numpy(lv, q))
+    us_jnp = _best_us(lambda: via_arrays("jnp"), repeats=3)
+    us_pallas = _best_us(lambda: via_arrays("pallas"), repeats=1)
+
+    # Effective bytes from the engine's own I/O model: every probe
+    # touches k 8-byte filter words, every bloom-positive read costs one
+    # page, plus the query batch itself.
+    _, _, probes, reads, fps = point_read_level_numpy(lv, q)
+    k_mean = float(np.mean(ks)) if len(ks) else 0.0
+    eff_bytes = 8 * len(q) + probes * k_mean * 8 \
+        + reads * tree.cfg.page_bytes
+    return {"us_numpy": us_numpy, "us_jnp_ref": us_jnp,
+            "us_pallas_interpret": us_pallas,
+            "probes": probes, "reads": reads, "false_positives": fps,
+            "runs": lv.num_runs, "level_entries": len(lv.keys),
+            "batch": len(q), "effective_bytes": eff_bytes,
+            "achieved_gbps": eff_bytes / (us_numpy * 1e-6) / 1e9,
+            "speedup_fused_vs_ref": us_jnp / us_numpy}
+
+
+def _dual_solve_cell() -> Dict[str, float]:
+    import functools
+
+    import jax
+    from repro.kernels.dual_solve.ops import dual_solve_warm_batch
+
+    rng = np.random.default_rng(3)
+    C = rng.gamma(2.0, 2.0, (DS_LANES, DS_COSTS)).astype(np.float32)
+    W = rng.dirichlet(np.ones(DS_COSTS), DS_LANES).astype(np.float32)
+    rho = np.full(DS_LANES, 0.25, np.float32)
+    llam = np.log(C.max(1) - C.min(1)).astype(np.float32)
+
+    # The production shape: every Adam step re-solves warm-started from
+    # the previous llam, so one "call" here is a DS_STEPS-long chain —
+    # that amortizes dispatch and measures the 12-vs-16-eval core.
+    @functools.partial(jax.jit, static_argnames=("impl",))
+    def chain(C, W, rho, llam, impl):
+        def body(ll, _):
+            v, ll2 = dual_solve_warm_batch(C, W, rho, ll, impl=impl)
+            return ll2, v
+        ll, vs = jax.lax.scan(body, llam, None, length=DS_STEPS)
+        return ll, vs
+
+    def run(impl, repeats=5):
+        def call():
+            jax.block_until_ready(chain(C, W, rho, llam, impl=impl))
+        return _best_us(call, repeats=repeats)
+
+    us_ref = run("ref")
+    us_fused = run("fused")
+    us_pallas = run("pallas", repeats=1)
+    eff_bytes = DS_STEPS * (C.nbytes + W.nbytes + rho.nbytes + llam.nbytes
+                            + 2 * DS_LANES * 4)
+    return {"us_ref": us_ref, "us_fused": us_fused,
+            "us_pallas_interpret": us_pallas,
+            "lanes": DS_LANES, "costs_per_lane": DS_COSTS,
+            "chain_steps": DS_STEPS,
+            "g_evals_ref": 16, "g_evals_fused": 12,
+            "effective_bytes": eff_bytes,
+            "achieved_gbps": eff_bytes / (us_fused * 1e-6) / 1e9,
+            "speedup_fused_vs_ref": us_ref / us_fused}
+
+
+def _merge_cell() -> Dict[str, float]:
+    from repro.kernels.merge.ops import merge_runs_arrays
+    from repro.lsm.merge_path import merge_runs_numpy
+
+    rng = np.random.default_rng(11)
+    keys_list, vals_list = [], []
+    for i, n in enumerate(MG_SIZES):
+        k = np.sort(rng.choice(1 << 40, n, replace=False).astype(np.uint64))
+        keys_list.append(k)
+        vals_list.append(rng.integers(0, 1 << 30, n).astype(np.int64))
+
+    us_numpy = _best_us(lambda: merge_runs_numpy(keys_list, vals_list))
+    us_jnp = _best_us(lambda: merge_runs_arrays(keys_list, vals_list,
+                                                impl="jnp"), repeats=3)
+    us_pallas = _best_us(lambda: merge_runs_arrays(keys_list, vals_list,
+                                                   impl="pallas"),
+                         repeats=1)
+    n_total = sum(MG_SIZES)
+    eff_bytes = 2 * n_total * 16        # read keys+vals, write keys+vals
+    return {"us_numpy": us_numpy, "us_jnp": us_jnp,
+            "us_pallas_interpret": us_pallas,
+            "entries": n_total, "runs": len(MG_SIZES),
+            "effective_bytes": eff_bytes,
+            "achieved_gbps": eff_bytes / (us_numpy * 1e-6) / 1e9}
+
+
+#: cell name -> measurement fn; bench_roofline reuses this registry.
+CELLS = {
+    "point_read": _point_read_cell,
+    "dual_solve": _dual_solve_cell,
+    "merge": _merge_cell,
+}
+
+
+def measure_cells() -> Dict[str, Dict[str, float]]:
+    """Run every kernel cell once; used here and by bench_roofline."""
+    return {name: fn() for name, fn in CELLS.items()}
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for name, fn in CELLS.items():
+        d = fn()
+        us = d.get("us_numpy", d.get("us_fused", 0.0))
+        rows.append(Row(f"kernels_{name}", us, **d))
+    return rows

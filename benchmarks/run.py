@@ -77,6 +77,16 @@ CHECK_METRICS = {
         # supervised no-fault path vs raw path: must stay near 1.0
         "faults_overhead.overhead_ratio": "lower",
     },
+    "kernels": {
+        # fused data plane must stay faster than its jnp references
+        "kernels_point_read.speedup_fused_vs_ref": "higher",
+        "kernels_dual_solve.speedup_fused_vs_ref": "higher",
+    },
+    "roofline": {
+        # the roofline table must keep measuring real kernel cells —
+        # an all-empty run raises, and a shrinking cell count gates
+        "roofline_kernels.measured_cells": "higher",
+    },
 }
 
 #: --check exit codes: regression vs misconfiguration (missing baseline /
@@ -96,6 +106,7 @@ SUITE_MODULES = [
     ("tab5", "bench_system_eval"),
     ("fig19", "bench_flexible_robustness"),
     ("tuner", "bench_tuner_perf"),
+    ("kernels", "bench_kernels"),
     ("roofline", "bench_roofline"),
     ("robust_sharding", "bench_robust_sharding"),
     ("compaction", "bench_compaction_space"),

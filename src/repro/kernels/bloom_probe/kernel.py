@@ -23,7 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from .._compat import compiler_params
 
 KEY_TILE = 128
 
@@ -79,7 +79,7 @@ def bloom_probe_kernel(keys: jax.Array, plane: jax.Array,
         ],
         out_specs=pl.BlockSpec((KEY_TILE,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(keys, plane)

@@ -1,0 +1,5 @@
+"""Fused warm-started KL dual solve (the robust tuner's inner loop)."""
+
+from .ops import (dual_solve_warm, dual_solve_warm_batch,  # noqa: F401
+                  dual_solve_warm_fused)
+from .ref import dual_solve_warm_ref  # noqa: F401

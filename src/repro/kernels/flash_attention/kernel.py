@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .._compat import compiler_params
+
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_KV = 128
 NEG_INF = -1e30
@@ -128,7 +130,7 @@ def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((block_q, 1), jnp.float32),   # l
             pltpu.VMEM((block_q, d), jnp.float32),   # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

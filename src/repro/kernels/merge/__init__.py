@@ -1,0 +1,4 @@
+"""Fused stable two-way / k-way merge for compaction."""
+
+from .ops import merge_runs_arrays  # noqa: F401
+from .ref import two_way_merge_ref  # noqa: F401

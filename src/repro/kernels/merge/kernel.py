@@ -1,0 +1,102 @@
+"""Pallas merge-path kernel: stable two-way merge, gather-only.
+
+Each grid step owns a 128-wide tile of *output* positions and finds,
+for every position ``m``, the merge-path split ``i`` — how many of the
+first ``m`` outputs come from run A — by binary search over the
+diagonal (Green et al.'s GPU Merge Path, the standard work-partitioned
+merge).  The split obeys the stability rule "A (newer) before equal B":
+``i`` is the smallest split with ``B[m-i-1] < A[i]``.  The output
+element is then a single gather from A or B.  No scatter anywhere —
+each lane independently computes its own output — which is what makes
+the merge expressible on a TPU's vector unit; both runs stay resident
+per tile (a production build would walk run windows via the grid).
+
+Output matches ``ref.two_way_merge_ref`` bit for bit (same interleave
+permutation); the caller (ops.py) drops adjacent duplicate keys to
+finish newest-wins dedup.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .._compat import compiler_params, interpret_default
+
+OUT_TILE = 128
+
+
+def _merge_tile(ak_ref, av_ref, bk_ref, bv_ref, k_ref, v_ref, *,
+                n_a: int, n_b: int):
+    t = pl.program_id(0)
+    T = k_ref.shape[1]
+    Ak = ak_ref[...]          # (1, nA)
+    Av = av_ref[...]
+    Bk = bk_ref[...]          # (1, nB)
+    Bv = bv_ref[...]
+    m = (t * T + jax.lax.broadcasted_iota(jnp.int64, (1, T), 1))
+
+    lo = jnp.maximum(jnp.int64(0), m - n_b)
+    hi = jnp.minimum(m, jnp.int64(n_a))
+    n_steps = max(1, int(math.ceil(math.log2(n_a + n_b + 1))) + 1)
+
+    def bstep(_, st):
+        lo, hi = st
+        active = lo < hi
+        i = (lo + hi) >> 1
+        # When active, 0 <= i < nA and 0 <= m-i-1 < nB hold by the
+        # bracket invariants; clip only guards padded lanes.
+        a_cand = Ak[0, jnp.clip(i, 0, n_a - 1)]
+        b_cand = Bk[0, jnp.clip(m - i - 1, 0, n_b - 1)]
+        take_more_a = ~(b_cand < a_cand)      # B[m-i-1] >= A[i]: i too small
+        lo = jnp.where(active & take_more_a, i + 1, lo)
+        hi = jnp.where(active & ~take_more_a, i, hi)
+        return lo, hi
+
+    i, _ = jax.lax.fori_loop(0, n_steps, bstep, (lo, hi))
+    j = m - i
+    a_key = Ak[0, jnp.clip(i, 0, n_a - 1)]
+    b_key = Bk[0, jnp.clip(j, 0, n_b - 1)]
+    take_a = (i < n_a) & ((j >= n_b) | (a_key <= b_key))
+    k_ref[...] = jnp.where(take_a, a_key, b_key)
+    v_ref[...] = jnp.where(take_a, Av[0, jnp.clip(i, 0, n_a - 1)],
+                           Bv[0, jnp.clip(j, 0, n_b - 1)])
+
+
+def two_way_merge_kernel(a_keys, a_vals, b_keys, b_vals,
+                         interpret: bool | None = None):
+    """Stable interleave of (A newer, B older); (keys, vals) of |A|+|B|.
+
+    Caller manages the x64 scope (uint64 keys / int64 values).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n_a, n_b = a_keys.shape[0], b_keys.shape[0]
+    N = n_a + n_b
+    Np = -(-N // OUT_TILE) * OUT_TILE
+
+    kern = functools.partial(_merge_tile, n_a=n_a, n_b=n_b)
+    full = lambda i: (0, 0)  # noqa: E731
+    tile = lambda i: (0, i)  # noqa: E731
+    keys, vals = pl.pallas_call(
+        kern,
+        grid=(Np // OUT_TILE,),
+        in_specs=[
+            pl.BlockSpec((1, n_a), full),
+            pl.BlockSpec((1, n_a), full),
+            pl.BlockSpec((1, n_b), full),
+            pl.BlockSpec((1, n_b), full),
+        ],
+        out_specs=[pl.BlockSpec((1, OUT_TILE), tile)] * 2,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, Np), a_keys.dtype),
+            jax.ShapeDtypeStruct((1, Np), a_vals.dtype),
+        ],
+        compiler_params=compiler_params(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(a_keys[None, :], a_vals[None, :], b_keys[None, :], b_vals[None, :])
+    return keys[0, :N], vals[0, :N]

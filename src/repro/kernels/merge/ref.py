@@ -1,0 +1,41 @@
+"""jnp reference for the stable two-way merge (rank-based, one pass).
+
+Merges two sorted unique key runs A (newer) and B (older) into the
+stable interleave of length ``|A| + |B|``: every element's output rank
+is its own index plus a ``searchsorted`` against the other run, with
+the tie rule "A before equal B" (newest first).  Output is *with*
+duplicates — equal keys land adjacent, A's version first — so the
+caller drops ``keys[i] == keys[i-1]`` positions to finish newest-wins
+dedup (the same adjacent-drop the legacy argsort-merge used), keeping
+shapes static for jax.
+
+This is exactly the permutation a stable sort of ``concat([A, B])``
+produces, so folding pairs newest-first reproduces the k-way
+argsort-merge bit for bit (associativity of newest-wins; tested).
+
+The Pallas kernel (kernel.py) computes the same interleave gather-only
+(merge-path binary search per output position) — no scatter, which is
+what makes the merge TPU-shaped.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def two_way_merge_ref(a_keys: jnp.ndarray, a_vals: jnp.ndarray,
+                      b_keys: jnp.ndarray, b_vals: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable interleave of (A newer, B older); returns (keys, vals)."""
+    nA, nB = a_keys.shape[0], b_keys.shape[0]
+    # Rank of A[i]: i + (# of B strictly before it); ties -> A first.
+    pos_a = jnp.arange(nA) + jnp.searchsorted(b_keys, a_keys, side="left")
+    # Rank of B[j]: j + (# of A at or before it); ties -> B after A.
+    pos_b = jnp.arange(nB) + jnp.searchsorted(a_keys, b_keys, side="right")
+    keys = jnp.zeros(nA + nB, a_keys.dtype)
+    vals = jnp.zeros(nA + nB, a_vals.dtype)
+    keys = keys.at[pos_a].set(a_keys).at[pos_b].set(b_keys)
+    vals = vals.at[pos_a].set(a_vals).at[pos_b].set(b_vals)
+    return keys, vals

@@ -1,0 +1,4 @@
+"""Fused batched point read over one level's SoA arenas."""
+
+from .ops import point_read_level_arrays  # noqa: F401
+from .ref import point_read_level_ref  # noqa: F401

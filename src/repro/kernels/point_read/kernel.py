@@ -1,0 +1,159 @@
+"""Pallas kernel: fused per-level point read, one VMEM pass per key tile.
+
+Grid is over 128-key tiles; each grid step holds its key tile plus the
+level's arenas (key/value SoA) and packed Bloom words resident and runs
+the *entire* level lookup for those keys — k splitmix64 hash rounds
+(shared across runs, exactly like ``BloomPack.probe``), per-run bit
+tests, fence-pointer window check, and a masked branchless binary
+search per run — newest -> oldest with the engine's sequential-
+equivalent per-key counters.
+
+The run layout (``starts``/``n_bits``/``ks``/fence keys) is static —
+baked into the kernel as Python constants, so run loops unroll and
+every bound/modulus is an immediate.  Levels are small (R <= ~10) and
+re-trace per layout, which interpret mode absorbs; a production TPU
+build would tile the arena block-by-block instead of assuming it fits
+VMEM, and would emulate uint64 as 2x32-bit limbs (x64 interpret mode
+runs the engine's exact splitmix64 directly — see docs/kernels.md).
+
+Bit-equivalence with ``ref.point_read_level_ref`` (same op sequence on
+the same masks) is tested per run-shape edge case.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .._compat import compiler_params, interpret_default
+from .ref import _GAMMA
+
+KEY_TILE = 128
+
+
+def _point_read_tile(keys_ref, akeys_ref, avals_ref, words_ref,
+                     hit_ref, enc_ref, probes_ref, reads_ref, fps_ref, *,
+                     starts: Tuple[int, ...], n_bits: Tuple[int, ...],
+                     ks: Tuple[int, ...], fence_lo: Tuple[int, ...],
+                     fence_hi: Tuple[int, ...]):
+    qk = keys_ref[...]            # (1, T) uint64
+    ak = akeys_ref[...]           # (1, E) uint64
+    av = avals_ref[...]           # (1, E) int64
+    words = words_ref[...]        # (R, Wmax) uint64
+    T = qk.shape[1]
+    R = len(starts) - 1
+
+    # Shared hash rounds (seeds 1..kmax), computed once per tile.
+    kmax = max(ks) if R else 0
+    hs = []
+    for j in range(kmax):
+        z = qk + jnp.uint64(j + 1) * jnp.uint64(_GAMMA)
+        z = (z ^ (z >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+        hs.append(z ^ (z >> jnp.uint64(31)))
+
+    hit = jnp.zeros((1, T), bool)
+    enc = jnp.zeros((1, T), jnp.int64)
+    live = jnp.ones((1, T), bool)
+    probes = jnp.zeros((1, T), jnp.int64)
+    reads = jnp.zeros((1, T), jnp.int64)
+    fps = jnp.zeros((1, T), jnp.int64)
+
+    for r in range(R):            # newest -> oldest, unrolled
+        probes = probes + live
+        bloom_ok = jnp.ones((1, T), bool)
+        for j in range(ks[r]):
+            hm = hs[j] % jnp.uint64(n_bits[r])
+            w = words[r, (hm >> jnp.uint64(6)).astype(jnp.int64)]
+            bloom_ok &= ((w >> (hm & jnp.uint64(63)))
+                         & jnp.uint64(1)).astype(bool)
+        pos = live & bloom_ok
+        reads = reads + pos
+        s, e = starts[r], starts[r + 1]
+        if e > s:
+            # Fence-pointer window: keys outside the run's [min, max]
+            # cannot be found; gates the search without changing counts.
+            in_fence = (pos & (qk >= jnp.uint64(fence_lo[r]))
+                        & (qk <= jnp.uint64(fence_hi[r])))
+            n_steps = max(1, int(math.ceil(math.log2(max(e - s, 1)))) + 1)
+
+            def bstep(_, st):
+                lo, hi = st
+                active = lo < hi
+                mid = (lo + hi) >> 1
+                am = ak[0, jnp.clip(mid, s, e - 1)]
+                less = am < qk
+                lo = jnp.where(active & less, mid + 1, lo)
+                hi = jnp.where(active & ~less, mid, hi)
+                return lo, hi
+
+            lo0 = jnp.full((1, T), s, jnp.int64)
+            hi0 = jnp.full((1, T), e, jnp.int64)
+            lo, _ = jax.lax.fori_loop(0, n_steps, bstep, (lo0, hi0))
+            safe = jnp.clip(lo, s, e - 1)
+            found = in_fence & (lo < e) & (ak[0, safe] == qk)
+            venc = av[0, safe]
+            hit = hit | found
+            enc = jnp.where(found, venc, enc)
+            live = live & ~found
+        else:
+            found = jnp.zeros((1, T), bool)
+        fps = fps + (pos & ~found)
+
+    hit_ref[...] = hit
+    enc_ref[...] = enc
+    probes_ref[...] = probes
+    reads_ref[...] = reads
+    fps_ref[...] = fps
+
+
+def point_read_level_kernel(sub_keys, arena_keys, arena_vals, words,
+                            starts: Tuple[int, ...],
+                            n_bits: Tuple[int, ...], ks: Tuple[int, ...],
+                            fence_lo: Tuple[int, ...],
+                            fence_hi: Tuple[int, ...],
+                            interpret: bool | None = None):
+    """Batched level read; returns (hit, enc, probes, reads, fps), (B,) each.
+
+    ``sub_keys`` (B,) uint64; ``arena_keys``/``arena_vals`` (E,) with
+    E >= 1; ``words`` (R, Wmax).  Run layout arguments are static host
+    tuples.  Caller manages the x64 scope (see ops.py).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    B = sub_keys.shape[0]
+    E = arena_keys.shape[0]
+    R, Wmax = words.shape
+    Bp = -(-B // KEY_TILE) * KEY_TILE
+    keys_p = jnp.pad(sub_keys, (0, Bp - B))[None, :]
+
+    kern = functools.partial(_point_read_tile, starts=starts, n_bits=n_bits,
+                             ks=ks, fence_lo=fence_lo, fence_hi=fence_hi)
+    full = lambda i: (0, 0)  # noqa: E731  (arena/words: whole-array blocks)
+    tile = lambda i: (0, i)  # noqa: E731
+    out = pl.pallas_call(
+        kern,
+        grid=(Bp // KEY_TILE,),
+        in_specs=[
+            pl.BlockSpec((1, KEY_TILE), tile),
+            pl.BlockSpec((1, E), full),
+            pl.BlockSpec((1, E), full),
+            pl.BlockSpec((R, Wmax), full),
+        ],
+        out_specs=[pl.BlockSpec((1, KEY_TILE), tile)] * 5,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, Bp), bool),
+            jax.ShapeDtypeStruct((1, Bp), jnp.int64),
+            jax.ShapeDtypeStruct((1, Bp), jnp.int64),
+            jax.ShapeDtypeStruct((1, Bp), jnp.int64),
+            jax.ShapeDtypeStruct((1, Bp), jnp.int64),
+        ],
+        compiler_params=compiler_params(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(keys_p, arena_keys[None, :], arena_vals[None, :], words)
+    return tuple(o[0, :B] for o in out)

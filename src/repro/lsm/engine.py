@@ -61,6 +61,7 @@ import numpy as np
 
 from .bloom import monkey_bits_per_key
 from .planner import make_planner
+from .read_path import point_read_level
 from .store import TOMB, RunData, RunStore, pages_of
 
 TOMBSTONE = object()
@@ -416,40 +417,25 @@ class LSMTree:
                     enc[hit] = henc
         stats = self.stats
         for lv in self.store.levels:
-            R = lv.num_runs
-            if R == 0:
+            if lv.num_runs == 0:
                 continue
             sub = np.flatnonzero(~resolved)     # still-unresolved query ids
             if sub.size == 0:
                 break
-            sub_keys = keys_arr[sub]
-            pos = lv.pack.probe(sub_keys)                # (R, len(sub))
-            sub_live = np.ones(len(sub), bool)           # unresolved, in-level
-            for r in range(R):                           # newest -> oldest
-                n_active = int(sub_live.sum())
-                if n_active == 0:
-                    break
-                stats.bloom_probes += n_active
-                pos_r = pos[r] & sub_live
-                n_pos = int(pos_r.sum())
-                if n_pos == 0:
-                    continue
-                stats.random_reads += n_pos   # fence pointer -> one page each
-                rkeys, rvals = lv.run_slice(r)
-                qk = sub_keys[pos_r]
-                loc = np.searchsorted(rkeys, qk)
-                inb = loc < len(rkeys)
-                eq = np.zeros(n_pos, bool)
-                eq[inb] = rkeys[loc[inb]] == qk[inb]
-                stats.bloom_false_positives += n_pos - int(eq.sum())
-                if eq.any():
-                    sidx = np.flatnonzero(pos_r)[eq]
-                    gidx = sub[sidx]
-                    venc = rvals[loc[eq]]
-                    sub_live[sidx] = False
-                    resolved[gidx] = True
-                    found[gidx] = venc != TOMB
-                    enc[gidx] = venc
+            # Fused per-level read (Bloom probe + fence + binary search);
+            # every implementation behind the dispatch keeps the exact
+            # sequential-equivalent counters — see lsm/read_path.py.
+            hit, henc, probes, reads, fps = point_read_level(
+                lv, keys_arr[sub])
+            stats.bloom_probes += probes
+            stats.random_reads += reads
+            stats.bloom_false_positives += fps
+            if hit.any():
+                gidx = sub[hit]
+                venc = henc[hit]
+                resolved[gidx] = True
+                found[gidx] = venc != TOMB
+                enc[gidx] = venc
         return found, enc
 
     def get(self, key: int) -> Optional[Any]:

@@ -1,0 +1,84 @@
+"""K-way stable newest-wins merge: the compaction hot loop as one op.
+
+``RunStore.merge`` reduces a newest-first run list to one sorted unique
+run (newest version of each key wins, exactly the legacy lexsort-merge
+semantics).  This module is the dispatch point for HOW that reduction
+executes:
+
+* ``numpy`` (default) — the historical implementation, verbatim: one
+  stable argsort over the concatenated arenas (concatenation order IS
+  recency order) + adjacent-duplicate drop.  Jax-free, like the rest of
+  the engine's default path.
+* ``jnp`` — pairwise newest-first fold of rank-based two-way merges
+  (``repro.kernels.merge.ref``), lazily imported.
+* ``pallas`` — the same fold where each two-way merge is the
+  merge-path Pallas kernel (gather-only binary-search partition per
+  output tile; ``repro.kernels.merge.kernel``).
+
+All three produce bit-identical (keys, vals) (tested): newest-wins
+dedup is associative, so folding pairwise newest-first equals the
+global stable sort.  The switch mirrors ``read_path``'s — process
+global, never engine config.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Sequence, Tuple
+
+import numpy as np
+
+VALID_MODES = ("numpy", "jnp", "pallas")
+
+_MODE = "numpy"
+
+
+def set_merge_kernel(mode: str) -> None:
+    """Select the compaction-merge implementation for this process."""
+    global _MODE
+    if mode not in VALID_MODES:
+        raise ValueError(
+            f"unknown merge kernel {mode!r}; one of {VALID_MODES}")
+    _MODE = mode
+
+
+def get_merge_kernel() -> str:
+    return _MODE
+
+
+@contextmanager
+def merge_kernel(mode: str):
+    """Scoped :func:`set_merge_kernel` (tests / benchmarks)."""
+    prev = get_merge_kernel()
+    set_merge_kernel(mode)
+    try:
+        yield
+    finally:
+        set_merge_kernel(prev)
+
+
+def merge_runs_numpy(keys_list: Sequence[np.ndarray],
+                     vals_list: Sequence[np.ndarray]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stable argsort-merge of newest-first runs -> sorted unique run."""
+    all_keys = np.concatenate(keys_list)
+    all_vals = np.concatenate(vals_list)
+    # Concatenation order IS recency order (inputs newest first), so a
+    # stable key sort leaves duplicates newest-first — equivalent to
+    # lexsort((recency, key)) at one sort over nearly-sorted data.
+    order = np.argsort(all_keys, kind="stable")
+    keys_sorted = all_keys[order]
+    vals_sorted = all_vals[order]
+    keep = np.ones(len(keys_sorted), bool)
+    keep[1:] = keys_sorted[1:] != keys_sorted[:-1]      # newest wins
+    return keys_sorted[keep], vals_sorted[keep]
+
+
+def merge_runs(keys_list: Sequence[np.ndarray],
+               vals_list: Sequence[np.ndarray]
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Mode-dispatched k-way newest-wins merge (see module docstring)."""
+    if _MODE == "numpy":
+        return merge_runs_numpy(keys_list, vals_list)
+    from repro.kernels.merge.ops import merge_runs_arrays
+    return merge_runs_arrays(keys_list, vals_list, impl=_MODE)

@@ -27,6 +27,7 @@ from typing import Any, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .bloom import BloomPack, bloom_params, build_words
+from .merge_path import merge_runs
 
 #: Encoded-value sentinel for deletes.  Even (never an intern slot, those are
 #: non-negative evens) and negative, so it cannot collide with either inline
@@ -313,18 +314,11 @@ class RunStore:
         epp = self.entries_per_page
         for r in inputs:
             stats.comp_pages_read += pages_of(len(r), epp)
-        all_keys = np.concatenate([r.keys for r in inputs])
-        all_vals = np.concatenate([r.vals for r in inputs])
-        # Concatenation order IS recency order (inputs newest first), so a
-        # stable key sort leaves duplicates newest-first — equivalent to
-        # lexsort((recency, key)) at one sort over nearly-sorted data.
-        order = np.argsort(all_keys, kind="stable")
-        keys_sorted = all_keys[order]
-        vals_sorted = all_vals[order]
-        keep = np.ones(len(keys_sorted), bool)
-        keep[1:] = keys_sorted[1:] != keys_sorted[:-1]      # newest wins
-        keys_u = keys_sorted[keep]
-        vals_u = vals_sorted[keep]
+        # Newest-wins k-way reduction; dispatched (numpy argsort-merge /
+        # jnp fold / Pallas merge-path kernel), all bit-identical — see
+        # lsm/merge_path.py.
+        keys_u, vals_u = merge_runs([r.keys for r in inputs],
+                                    [r.vals for r in inputs])
         if drop_tombstones:
             live = vals_u != TOMB
             keys_u, vals_u = keys_u[live], vals_u[live]

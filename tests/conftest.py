@@ -13,11 +13,13 @@
    *skipped* with a reason instead of passing under degraded coverage —
    the matrix's real-hypothesis leg is where they count.
 
-2. ``test_kernels.py`` targets the Pallas TPU API surface
-   (``pltpu.CompilerParams``); on JAX builds without it the module cannot
-   even construct its kernels, so it skips itself at import with an
-   explicit reason (visible in ``pytest -rs`` / CI summaries, unlike the
-   former silent ``collect_ignore``).
+2. Kernel tests (``test_kernels.py``, ``test_engine_kernels.py``) run on
+   every container: kernels resolve the Pallas TPU CompilerParams class
+   through ``repro.kernels._compat`` (``CompilerParams`` vs the older
+   ``TPUCompilerParams`` spelling, or None when the TPU backend is
+   absent), and the tests pin ``interpret=True`` so no Mosaic lowering
+   is required.  The compiled leg is auto-selected by the ``ops.py``
+   dispatch wrappers when the default backend is a real TPU.
 """
 
 import importlib.util

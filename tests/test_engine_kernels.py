@@ -1,0 +1,112 @@
+"""Engine-level goldens for the kernel data plane (PR 7).
+
+Switching the point-read implementation (``lsm.read_path`` modes) or the
+compaction-merge implementation (``lsm.merge_path`` modes) is a pure
+execution choice: query results, tree shape, on-disk arenas, and the
+``IOStats`` I/O accounting must all stay bit-identical.  These tests pin
+that contract at the engine boundary — the per-kernel bit-equivalence
+tests live in ``tests/test_kernels.py``.
+
+Trees are deliberately small: off-TPU the Pallas legs run under the
+interpret-mode evaluator, which re-traces per arena layout.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.lsm import EngineConfig, LSMTree
+from repro.lsm.merge_path import get_merge_kernel, merge_kernel
+from repro.lsm.read_path import get_read_kernel, read_kernel
+
+N_KEYS = 1500
+
+
+def _build(policy="klsm", n=N_KEYS, seed=0):
+    tree = LSMTree(EngineConfig(T=3, K=(2, 2), buf_entries=64,
+                                expected_entries=n,
+                                mfilt_bits_per_entry=8.0, policy=policy))
+    rng = np.random.default_rng(seed)
+    keys = rng.choice(1 << 32, n, replace=False).astype(np.uint64)
+    tree.put_batch(keys, [int(k) % 1009 for k in keys])
+    for k in keys[:40]:                      # tombstones in the mix
+        tree.delete(int(k))
+    tree.flush()
+    return tree, keys
+
+
+def _queries(keys, seed=1):
+    rng = np.random.default_rng(seed)
+    q = np.concatenate([
+        rng.choice(keys, 150),               # present (some deleted)
+        keys[:20],                           # definitely deleted
+        rng.choice(1 << 32, 87).astype(np.uint64),   # mostly absent
+    ])
+    return [int(k) for k in q]
+
+
+def _fingerprint(tree):
+    """Everything the data plane could possibly perturb."""
+    shape = tree.shape()
+    arenas = [(lv.keys.tobytes(), lv.vals.tobytes(),
+               tuple(np.asarray(lv.starts)))
+              for lv in tree.store.levels]
+    return shape, arenas, dataclasses.asdict(tree.stats)
+
+
+def test_read_mode_default_is_numpy():
+    assert get_read_kernel() == "numpy"
+    assert get_merge_kernel() == "numpy"
+
+
+def test_point_query_batch_golden_across_read_modes():
+    """Results AND per-query IOStats deltas identical in all 3 modes."""
+    out = {}
+    for mode in ("numpy", "jnp", "pallas"):
+        tree, keys = _build()
+        q = _queries(keys)
+        with read_kernel(mode):
+            before = tree.stats.snapshot()
+            res = tree.point_query_batch(q)
+            delta = tree.stats.minus(before)
+        out[mode] = (res, dataclasses.asdict(delta))
+    assert out["jnp"] == out["numpy"]
+    assert out["pallas"] == out["numpy"]
+
+
+def test_read_mode_scoped_switch_restores():
+    with read_kernel("jnp"):
+        assert get_read_kernel() == "jnp"
+    assert get_read_kernel() == "numpy"
+    with pytest.raises(ValueError):
+        read_kernel("vulkan").__enter__()
+
+
+@pytest.mark.parametrize("policy", ["klsm", "partial", "lazy_leveling",
+                                    "tombstone_ttl"])
+def test_build_golden_across_merge_modes_jnp(policy):
+    """Building the tree with the jnp rank-merge must leave shape,
+    arenas, compaction accounting, and query answers unchanged."""
+    # partial compaction emits many distinct merge shapes; a smaller
+    # tree keeps its eager-jnp dispatch cost bounded
+    n = 700 if policy == "partial" else N_KEYS
+    tree_ref, keys = _build(policy, n=n)
+    ref = (_fingerprint(tree_ref), tree_ref.point_query_batch(_queries(keys)))
+    with merge_kernel("jnp"):
+        tree, _ = _build(policy, n=n)
+        got = (_fingerprint(tree), tree.point_query_batch(_queries(keys)))
+    assert got == ref
+
+
+@pytest.mark.parametrize("policy", ["klsm", "partial"])
+def test_build_golden_across_merge_modes_pallas(policy):
+    """Same contract for the Pallas merge-path kernel (interpret mode);
+    two policies keep the re-trace count bounded off-TPU."""
+    n = 600                                  # smaller: interpret re-traces
+    tree_ref, keys = _build(policy, n=n)
+    ref = (_fingerprint(tree_ref), tree_ref.point_query_batch(_queries(keys)))
+    with merge_kernel("pallas"):
+        tree, _ = _build(policy, n=n)
+        got = (_fingerprint(tree), tree.point_query_batch(_queries(keys)))
+    assert got == ref

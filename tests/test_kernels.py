@@ -1,16 +1,16 @@
 """Per-kernel validation: shape/dtype sweeps in interpret mode against the
-pure-jnp oracles (+ hypothesis property tests)."""
+pure-jnp oracles (+ hypothesis property tests).
+
+Kernels construct their CompilerParams through ``repro.kernels._compat``
+(which resolves ``pltpu.CompilerParams`` vs the older
+``pltpu.TPUCompilerParams`` spelling, or returns None on builds without
+the TPU backend), so this module runs everywhere: the interpret leg
+(``interpret=True``, exercised below) works on any backend, and the
+compiled leg is auto-selected by each ``ops.py`` wrapper when the
+default backend is an actual TPU.
+"""
 
 import pytest
-
-try:
-    from jax.experimental.pallas import tpu as _pltpu
-except Exception:      # pallas TPU backend entirely absent
-    _pltpu = None
-if _pltpu is None or not hasattr(_pltpu, "CompilerParams"):
-    pytest.skip("Pallas TPU API surface (pltpu.CompilerParams) not in this "
-                "JAX build; kernels cannot be constructed",
-                allow_module_level=True)
 
 import jax
 import jax.numpy as jnp
@@ -23,9 +23,16 @@ from repro.kernels.bloom_probe.ref import build_plane, probe_ref
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.dual_solve.ops import (dual_solve_warm,
+                                          dual_solve_warm_batch)
+from repro.kernels.merge.ops import merge_runs_arrays
+from repro.kernels.point_read.ops import point_read_level_arrays
 from repro.kernels.rwkv6.kernel import rwkv6_kernel
 from repro.kernels.rwkv6.ops import rwkv6_chunked
 from repro.kernels.rwkv6.ref import wkv_ref
+from repro.lsm.merge_path import merge_runs_numpy
+from repro.lsm.read_path import point_read_level_numpy
+from repro.lsm.store import TOMB, LevelStore, RunData
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +186,222 @@ def test_bloom_probe_no_false_negatives(seed):
     out = bloom_probe_kernel(jnp.asarray(keys), jnp.asarray(plane),
                              num_hashes=4, interpret=True)
     assert (np.asarray(out) > 0.5).all()
+
+
+# ---------------------------------------------------------------------------
+# point read (fused per-level batched read; PR 7)
+# ---------------------------------------------------------------------------
+
+def _mk_level(run_specs, bpk=8.0):
+    """LevelStore from newest-first ``[(keys, vals), ...]`` run specs."""
+    runs = [RunData.build(np.asarray(k, np.uint64), np.asarray(v, np.int64),
+                          bpk, flushes=1) for k, v in run_specs]
+    lv = LevelStore()
+    lv._set_runs(runs)
+    return lv
+
+
+def _level_arrays(lv):
+    pack = lv.pack
+    return (lv.keys, lv.vals, np.asarray(lv.starts, np.int64), pack.words,
+            np.asarray(pack.n_bits, np.uint64), np.asarray(pack.ks, np.int64),
+            lv.min_keys, lv.max_keys)
+
+
+def _assert_read_modes_bit_equal(lv, q):
+    """numpy (engine-verbatim) / jnp ref / pallas must agree exactly."""
+    q = np.asarray(q, np.uint64)
+    ref = point_read_level_numpy(lv, q)
+    for impl in ("jnp", "pallas"):
+        hit, enc, probes, reads, fps = point_read_level_arrays(
+            q, *_level_arrays(lv), impl=impl)
+        np.testing.assert_array_equal(hit, ref[0], err_msg=impl)
+        np.testing.assert_array_equal(enc[hit], ref[1][ref[0]],
+                                      err_msg=impl)
+        assert (probes, reads, fps) == ref[2:], impl
+
+
+def test_point_read_multi_run_level_bit_equal():
+    rng = np.random.default_rng(0)
+    pool = rng.choice(1 << 48, 3000, replace=False).astype(np.uint64)
+    specs = [(np.sort(pool[:900]), np.arange(900)),
+             (np.sort(pool[900:1100]), np.arange(200) + 10_000),
+             (np.sort(pool[1100:2400]), np.arange(1300) + 50_000)]
+    lv = _mk_level(specs)
+    # present in various runs, absent, duplicated queries; B = 200 is
+    # not a multiple of the 128-key pallas tile (exercises padding)
+    q = np.concatenate([pool[rng.integers(0, 2400, 120)],
+                        pool[2400:2470], pool[:10]])
+    _assert_read_modes_bit_equal(lv, q)
+
+
+def test_point_read_overlapping_runs_newest_wins():
+    """Same key in several runs: only the newest run's value counts and
+    older runs are not probed for the resolved key (counter semantics)."""
+    keys = np.arange(100, 200, dtype=np.uint64)
+    specs = [(keys[:60], np.full(60, 1)),       # newest
+             (keys[20:80], np.full(60, 2)),
+             (keys, np.full(100, 3))]           # oldest
+    lv = _mk_level(specs)
+    _assert_read_modes_bit_equal(lv, keys)
+    hit, enc, *_ = point_read_level_arrays(keys, *_level_arrays(lv),
+                                           impl="pallas")
+    assert hit.all()
+    np.testing.assert_array_equal(enc[:60], 1)
+    np.testing.assert_array_equal(enc[60:80], 2)
+    np.testing.assert_array_equal(enc[80:], 3)
+
+
+@pytest.mark.parametrize("case", ["empty_run", "single_entry",
+                                  "all_tombstone", "odd_batch"])
+def test_point_read_edge_cases(case):
+    rng = np.random.default_rng(hash(case) % 2 ** 31)
+    if case == "empty_run":
+        specs = [(np.arange(10, 20), np.arange(10)),
+                 ([], []),                       # merged-away run
+                 (np.arange(15, 40), np.arange(25))]
+        q = np.arange(5, 45)
+    elif case == "single_entry":
+        specs = [([7], [70]), ([7], [71]), ([9], [90])]
+        q = np.array([7, 8, 9, 7])
+    elif case == "all_tombstone":
+        keys = np.arange(50, 80, dtype=np.uint64)
+        specs = [(keys, np.full(30, TOMB)),      # deletes shadow ...
+                 (keys, np.arange(30))]          # ... the older values
+        q = np.arange(40, 90)
+    else:                                        # batch % 128 != 0
+        keys = np.sort(rng.choice(1 << 32, 500, replace=False)
+                       .astype(np.uint64))
+        specs = [(keys[::2], np.arange(250))]
+        q = rng.choice(keys, 37)
+    lv = _mk_level(specs)
+    _assert_read_modes_bit_equal(lv, q)
+    if case == "all_tombstone":
+        hit, enc, *_ = point_read_level_arrays(
+            np.arange(50, 80, dtype=np.uint64), *_level_arrays(lv),
+            impl="pallas")
+        assert hit.all() and (enc == TOMB).all()
+
+
+def test_point_read_empty_level_and_empty_batch():
+    lv = _mk_level([(np.arange(5), np.arange(5))])
+    hit, enc, probes, reads, fps = point_read_level_arrays(
+        np.empty(0, np.uint64), *_level_arrays(lv), impl="pallas")
+    assert len(hit) == 0 and (probes, reads, fps) == (0, 0, 0)
+    lv0 = _mk_level([([], []), ([], [])])
+    q = np.arange(3, dtype=np.uint64)
+    _assert_read_modes_bit_equal(lv0, q)
+
+
+# ---------------------------------------------------------------------------
+# dual solve (robust tuner inner loop; PR 7)
+# ---------------------------------------------------------------------------
+
+def _dual_solve_batch(L, n=33, seed=0):
+    rng = np.random.default_rng(seed)
+    C = rng.gamma(2.0, 2.0, (L, n)).astype(np.float32)
+    W = rng.dirichlet(np.ones(n), L).astype(np.float32)
+    rho = rng.uniform(0.0, 2.0, L).astype(np.float32)
+    rho[::3] = 0.0                      # exercise the nominal branch
+    llam = np.log(C.max(1) - C.min(1)).astype(np.float32)
+    return C, W, rho, llam
+
+
+@pytest.mark.parametrize("L", [1, 7, 128, 300])
+def test_dual_solve_pallas_bit_equals_fused(L):
+    """Lane-tiled kernel vs vmapped fused: exact f32 equality, including
+    lane counts that are not a multiple of the 128-lane tile."""
+    C, W, rho, llam = _dual_solve_batch(L, seed=L)
+    vf, lf = dual_solve_warm_batch(C, W, rho, llam, impl="fused")
+    vp, lp = dual_solve_warm_batch(C, W, rho, llam, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(vf), np.asarray(vp))
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(lp))
+
+
+def test_dual_solve_fused_matches_ref_values():
+    """Cached-point golden (12 evals) vs two-point reference (16 evals):
+    same bracket-shrink rate, so values agree to optimizer-noise level."""
+    C, W, rho, llam = _dual_solve_batch(64, seed=3)
+    vr, lr = dual_solve_warm_batch(C, W, rho, llam, impl="ref")
+    vf, lf = dual_solve_warm_batch(C, W, rho, llam, impl="fused")
+    np.testing.assert_allclose(np.asarray(vf), np.asarray(vr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lr), atol=2e-3)
+
+
+def test_dual_solve_single_lane_dispatch():
+    C, W, rho, llam = _dual_solve_batch(1, seed=9)
+    vf, _ = dual_solve_warm(C[0], W[0], rho[0], llam[0], impl="fused")
+    vr, _ = dual_solve_warm(C[0], W[0], rho[0], llam[0], impl="ref")
+    assert float(vf) == pytest.approx(float(vr), rel=1e-4, abs=1e-4)
+    with pytest.raises(ValueError):
+        dual_solve_warm(C[0], W[0], rho[0], llam[0], impl="pallas")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 200), L=st.integers(1, 40))
+def test_dual_solve_pallas_fused_property(seed, L):
+    C, W, rho, llam = _dual_solve_batch(L, n=17, seed=seed)
+    vf, lf = dual_solve_warm_batch(C, W, rho, llam, impl="fused")
+    vp, lp = dual_solve_warm_batch(C, W, rho, llam, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(vf), np.asarray(vp))
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(lp))
+
+
+# ---------------------------------------------------------------------------
+# compaction merge (k-way stable merge; PR 7)
+# ---------------------------------------------------------------------------
+
+def _mk_runs(sizes, seed=0, overlap=True):
+    """Newest-first sorted-unique runs with heavy key overlap."""
+    rng = np.random.default_rng(seed)
+    pool = rng.choice(1 << 20 if overlap else 1 << 48, max(sizes) * 2 + 4,
+                      replace=False).astype(np.uint64)
+    keys, vals = [], []
+    for i, n in enumerate(sizes):
+        k = np.sort(rng.choice(pool, n, replace=False)) if n else \
+            np.empty(0, np.uint64)
+        keys.append(k)
+        vals.append((rng.integers(0, 1 << 30, n) * 10 + i).astype(np.int64))
+    return keys, vals
+
+
+@pytest.mark.parametrize("sizes", [
+    (100, 80), (1, 1), (1, 0, 5), (0, 0), (257, 100, 3),   # != 128 tiles
+    (64, 64, 64, 64),
+])
+def test_merge_modes_bit_equal(sizes):
+    keys, vals = _mk_runs(list(sizes), seed=sum(sizes))
+    ref_k, ref_v = merge_runs_numpy(keys, vals)
+    for impl in ("jnp", "pallas"):
+        mk, mv = merge_runs_arrays(keys, vals, impl=impl)
+        np.testing.assert_array_equal(mk, ref_k, err_msg=impl)
+        np.testing.assert_array_equal(mv, ref_v, err_msg=impl)
+
+
+def test_merge_newest_wins_on_duplicates():
+    """Every key duplicated across all runs: output must keep run 0's
+    value (newest-first input order, like the legacy argsort merge)."""
+    keys = np.arange(1000, 1300, dtype=np.uint64)
+    klist = [keys, keys, keys]
+    vlist = [np.full(300, i, np.int64) for i in range(3)]
+    ref_k, ref_v = merge_runs_numpy(klist, vlist)
+    assert (ref_v == 0).all()
+    for impl in ("jnp", "pallas"):
+        mk, mv = merge_runs_arrays(klist, vlist, impl=impl)
+        np.testing.assert_array_equal(mk, ref_k)
+        np.testing.assert_array_equal(mv, ref_v)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), na=st.integers(0, 60),
+       nb=st.integers(0, 60), nc=st.integers(0, 60))
+def test_merge_modes_property(seed, na, nb, nc):
+    keys, vals = _mk_runs([na, nb, nc], seed=seed)
+    ref_k, ref_v = merge_runs_numpy(keys, vals)
+    mk, mv = merge_runs_arrays(keys, vals, impl="jnp")
+    np.testing.assert_array_equal(mk, ref_k)
+    np.testing.assert_array_equal(mv, ref_v)
 
 
 # ---------------------------------------------------------------------------
