@@ -37,10 +37,11 @@ one that parses as JSON but lacks the suite's ``CHECK_METRICS`` rows/keys
 (e.g. stale, or committed before a metric was added), or a filter that
 selects no suite at all (a typo would otherwise pass vacuously).
 
-``--list`` prints the suite names one per line (for CI job matrices) and
-exits; ``--list --gated`` prints only the suites the perf gate watches
-(the ``CHECK_METRICS`` keys), so CI derives its gate list from here instead
-of hardcoding it.
+``--list`` prints the suite names one per line, each with the one-line
+description from its bench module's docstring (parsed via ``ast`` — no
+jax import), and exits; ``--list --gated`` prints only the suites the
+perf gate watches (the ``CHECK_METRICS`` keys) as *bare* names, so CI
+derives its gate list from here instead of hardcoding it.
 """
 
 import argparse
@@ -87,6 +88,14 @@ CHECK_METRICS = {
         # an all-empty run raises, and a shrinking cell count gates
         "roofline_kernels.measured_cells": "higher",
     },
+    "memory": {
+        "memory_fleet.engine_s": "lower",
+        # arbitrated fleet throughput over the static equal split
+        "memory_summary.fleet_speedup_min": "higher",
+        # bools: arbitration never loses; disabled stays bit-identical
+        "memory_summary.claim_arbitrated_ge_static": "higher",
+        "memory_summary.claim_disabled_identical": "higher",
+    },
 }
 
 #: --check exit codes: regression vs misconfiguration (missing baseline /
@@ -113,7 +122,21 @@ SUITE_MODULES = [
     ("api", "bench_api"),
     ("online", "bench_online_drift"),
     ("faults", "bench_faults"),
+    ("memory", "bench_memory_fleet"),
 ]
+
+
+def _suite_description(module_name: str) -> str:
+    """First docstring line of a bench module, parsed via ``ast`` so
+    ``--list`` stays jax-import-free (module import pulls in the stack)."""
+    import ast
+    path = os.path.join(os.path.dirname(__file__), module_name + ".py")
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = ast.get_docstring(ast.parse(f.read()))
+    except (OSError, SyntaxError):
+        doc = None
+    return doc.strip().splitlines()[0] if doc else ""
 
 
 def _load_baselines(suites, baseline_dir):
@@ -293,9 +316,16 @@ def main() -> None:
     args = parser.parse_args()
 
     if args.list:
-        for key, _ in SUITE_MODULES:
-            if not args.gated or key in CHECK_METRICS:
-                print(key)
+        if args.gated:
+            # bare names, one per line: CI job matrices parse this output,
+            # so it must stay byte-stable as suites gain descriptions
+            for key, _ in SUITE_MODULES:
+                if key in CHECK_METRICS:
+                    print(key)
+            return
+        width = max(len(key) for key, _ in SUITE_MODULES)
+        for key, name in SUITE_MODULES:
+            print(f"{key:<{width}}  {_suite_description(name)}".rstrip())
         return
     if args.resume and not args.run_dir:
         parser.error("--resume requires --run-dir (the directory holding "
@@ -318,7 +348,11 @@ def main() -> None:
               "run --list to see suite names")
         raise SystemExit(EXIT_MISCONFIGURED)
     import importlib
-    selected = [(key, importlib.import_module(f".{name}", __package__))
+    # `python -m benchmarks.run` imports siblings relatively; a direct
+    # `python benchmarks/run.py` has no package, but the script's own
+    # directory leads sys.path, so the absolute name resolves there.
+    selected = [(key, importlib.import_module(f".{name}", __package__)
+                 if __package__ else importlib.import_module(name))
                 for key, name in selected_names]
     if args.json:
         os.makedirs(args.json, exist_ok=True)

@@ -26,20 +26,21 @@ import time
 from .backends import (BACKENDS, ExecutionBackend, InlineBackend,
                        RemoteBackend, ShardedBackend, SubprocessBackend,
                        execute_trial, get_backend)
-from .compile import (CompiledExperiment, DriftPlan, TrialPlan, TuningPlan,
-                      compile_spec, drift_schedule)
+from .compile import (CompiledExperiment, DriftPlan, MemoryPlan, TrialPlan,
+                      TuningPlan, compile_spec, drift_schedule)
 from .report import (Report, Row, TreeProbe, costs_over_benchmark, delta_tp,
                      fmt, jsonable, timed)
-from .spec import (DesignSpec, DriftSpec, ExperimentSpec, TrialSpec,
-                   WorkloadSpec)
+from .spec import (DesignSpec, DriftSpec, ExperimentSpec, MemorySpec,
+                   TrialSpec, WorkloadSpec)
 from repro.faults import FaultPlan, FaultSpec
 
 __all__ = [
     "ExperimentSpec", "WorkloadSpec", "DesignSpec", "TrialSpec", "DriftSpec",
+    "MemorySpec",
     "FaultSpec", "FaultPlan",
     "Report", "Row", "TreeProbe", "run_experiment",
     "compile_spec", "CompiledExperiment", "TuningPlan", "TrialPlan",
-    "DriftPlan", "drift_schedule",
+    "DriftPlan", "MemoryPlan", "drift_schedule",
     "BACKENDS", "ExecutionBackend", "InlineBackend", "ShardedBackend",
     "SubprocessBackend", "RemoteBackend", "get_backend", "execute_trial",
     "costs_over_benchmark", "delta_tp", "timed", "fmt", "jsonable",
@@ -76,7 +77,14 @@ def run_experiment(spec: ExperimentSpec, backend=None) -> Report:
     trial = cx.build_trial(report)
     if trial is not None:
         backend.run_trial(trial, report, faults=faults)
-    drift = cx.build_drift(report)
-    if drift is not None:
-        backend.run_drift(drift, report)
+    memory = cx.build_memory(report)
+    if memory is not None:
+        # the memory axis REPLACES drift-arm execution: the drift spec is
+        # consumed as the schedule/loop configuration of the paired
+        # static/arbitrated fleet comparison (docs/memory.md)
+        backend.run_memory(memory, report)
+    else:
+        drift = cx.build_drift(report)
+        if drift is not None:
+            backend.run_drift(drift, report)
     return report

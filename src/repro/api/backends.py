@@ -174,6 +174,22 @@ class ExecutionBackend:
         report.drift.update(execute_drift(plan))
         report.walls["drift_s"] = time.time() - t0
 
+    def run_memory(self, plan, report: Report) -> None:
+        """Run a compiled memory-arbitration experiment
+        (``repro.api.compile.MemoryPlan``).
+
+        Shared for the same reason as :meth:`run_drift`: the arbitration
+        loop feeds observed segments back into memory divisions, so it is
+        sequential per fleet and every backend runs the same inline driver
+        (its re-tune storms are still one batched dispatch per granted
+        share)."""
+        from repro.online import execute_memory_fleet
+        t0 = time.time()
+        results, events = execute_memory_fleet(plan)
+        report.memory.update(results)
+        report.memory_events.extend(events)
+        report.walls["memory_s"] = time.time() - t0
+
 
 class InlineBackend(ExecutionBackend):
     """Single-process reference execution (today's vmap path).
@@ -695,6 +711,9 @@ class RemoteBackend(ExecutionBackend):
         raise NotImplementedError(self._MSG)
 
     def run_drift(self, plan, report: Report) -> None:
+        raise NotImplementedError(self._MSG)
+
+    def run_memory(self, plan, report: Report) -> None:
         raise NotImplementedError(self._MSG)
 
 

@@ -104,6 +104,28 @@ class DriftPlan:
     design: object = None            # DesignSpace re-tunes solve in
 
 
+@dataclasses.dataclass
+class MemoryPlan:
+    """A compiled memory-arbitration experiment
+    (:class:`repro.api.spec.MemorySpec` over a drift schedule): one tenant
+    per workload row, each starting from its robust cell's chosen policy
+    arm, plus the budget spec and the equal-split base system.  Executed by
+    :func:`repro.online.execute_memory_fleet` (paired static/arbitrated
+    fleets; inherently sequential like the drift loop, so every backend
+    shares the inline driver)."""
+
+    tunings: List[object]            # per-tenant initial TuningResult
+    policies: List[str]              # per-tenant chosen policy arm
+    policy_params: List[Pairs]
+    rho0: float                      # live budget of the initial tunings
+    expected: np.ndarray             # (F, 4)
+    schedules: np.ndarray            # (F, S, 4)
+    drift: object                    # the DriftSpec (schedule + loop knobs)
+    memory: object                   # the MemorySpec (budget semantics)
+    sys: object                      # equal-split base LSMSystem
+    design: object = None            # DesignSpace re-tunes solve in
+
+
 def drift_schedule(expected: np.ndarray, drift) -> np.ndarray:
     """Materialize a drift spec's per-segment true mixes, (S, 4)."""
     S = int(drift.segments)
@@ -402,6 +424,42 @@ class CompiledExperiment:
         return DriftPlan(arms=arms, expected=np.asarray(self.W, np.float64),
                          schedules=schedules, drift=dr, sys=self.sys,
                          design=self.primary_design)
+
+    # -- memory -------------------------------------------------------------
+
+    def build_memory(self, report: Report) -> Optional[MemoryPlan]:
+        """Lower the spec's memory axis onto a per-tenant fleet.
+
+        Every workload row is one tenant; each deploys its robust cell
+        (i, rho*) at the LAST resolved rho — the ``static_robust``
+        convention, so the static fleet here is bit-identical to that
+        drift arm — with the cell's chosen policy arm.  When a memory spec
+        is present it *replaces* drift-arm execution: the drift spec is
+        the schedule/loop configuration, the memory spec the division
+        semantics."""
+        me = self.spec.memory
+        if me is None:
+            return None
+        dr = self.spec.drift
+        rho0 = self.rhos[-1] if self.rhos else 0.0
+        tunings: List[object] = []
+        policies: List[str] = []
+        params: List[Pairs] = []
+        for i in range(len(self.W)):
+            cell = (i, rho0)
+            pol = report.chosen[cell]
+            tunings.append(report.tunings[cell][pol])
+            policies.append(pol)
+            params.append(tuple(
+                (k, v) for k, v in self.spec.design.params_for(pol)
+                if k not in MODEL_ONLY_PARAMS))
+        schedules = np.stack([drift_schedule(self.W[i], dr)
+                              for i in range(len(self.W))])
+        return MemoryPlan(tunings=tunings, policies=policies,
+                          policy_params=params, rho0=float(rho0),
+                          expected=np.asarray(self.W, np.float64),
+                          schedules=schedules, drift=dr, memory=me,
+                          sys=self.sys, design=self.primary_design)
 
 
 def compile_spec(spec: ExperimentSpec) -> CompiledExperiment:

@@ -273,6 +273,61 @@ class DriftSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class MemorySpec:
+    """Fleet-level memory arbitration over the drift schedule — the
+    :mod:`repro.online.memory` subsystem as a spec axis.
+
+    Composes with (and requires) :class:`DriftSpec`: the drift spec
+    supplies the tenants (the workload rows), the per-tenant true-mix
+    schedules, the deployment scale, and the estimator / trigger / re-tune
+    solver knobs; this spec supplies the budget semantics.  Execution
+    replaces the drift arms with a paired two-fleet comparison (``static``
+    fixed equal split vs ``arbitrated``; see
+    :func:`repro.online.execute_memory_fleet`).
+
+    **Budget** — ``total_bits_per_entry`` is the global budget summed over
+    tenants (default: ``n_tenants * sys.bits_per_entry``, i.e. exactly the
+    memory the fixed-split fleet already holds, so the comparison is
+    division, not provisioning).  ``floor_bits_per_entry`` bounds how far a
+    tenant can be squeezed; ``quantum_bits_per_entry`` is the allocation
+    granularity (spatial hysteresis).
+
+    **Trigger/hysteresis** — per-tenant KL triggers reuse the
+    :class:`repro.online.DriftPolicy` contract with the drift spec's
+    ``kl_threshold`` (override with ``rebalance_kl``) and ``rho_floor``;
+    ``min_windows`` and ``cooldown`` here gate the *fleet-level* decision
+    (one re-division resets every tenant's cooldown).
+
+    ``enabled=False`` deploys the arbitrated fleet at the fixed equal
+    split and never re-divides: its results are bit-identical to the
+    static fleet (the disabled-arbitration invariant the memory bench
+    gates)."""
+
+    enabled: bool = True
+    total_bits_per_entry: Optional[float] = None
+    floor_bits_per_entry: float = 2.0
+    quantum_bits_per_entry: float = 0.5
+    rebalance_kl: Optional[float] = None
+    min_windows: int = 2
+    cooldown: int = 2
+
+    def __post_init__(self):
+        if self.floor_bits_per_entry <= 0.0:
+            raise ValueError("floor_bits_per_entry must be > 0")
+        if self.quantum_bits_per_entry <= 0.0:
+            raise ValueError("quantum_bits_per_entry must be > 0")
+        if self.total_bits_per_entry is not None \
+                and self.total_bits_per_entry <= 0.0:
+            raise ValueError("total_bits_per_entry must be > 0 (or None "
+                             "for n_tenants * sys.bits_per_entry)")
+        if self.rebalance_kl is not None and self.rebalance_kl <= 0.0:
+            raise ValueError("rebalance_kl must be > 0 (or None for the "
+                             "drift spec's kl_threshold)")
+        if self.min_windows < 1 or self.cooldown < 0:
+            raise ValueError("min_windows must be >= 1 and cooldown >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """The whole experiment: workload uncertainty x design x trial x backend.
 
@@ -296,6 +351,7 @@ class ExperimentSpec:
     design: DesignSpec = DesignSpec()
     trial: Optional[TrialSpec] = None
     drift: Optional[DriftSpec] = None
+    memory: Optional[MemorySpec] = None
     system: Pairs = ()
     backend: str = "inline"
     backend_params: Pairs = ()
@@ -317,6 +373,17 @@ class ExperimentSpec:
                     and not self.workload.nominal:
                 raise ValueError("drift arm 'stale_nominal' needs "
                                  "workload.nominal=True")
+        if self.memory is not None:
+            if self.drift is None:
+                raise ValueError(
+                    "memory arbitration rides the drift schedule: a "
+                    "MemorySpec needs a DriftSpec (tenants, schedules, "
+                    "deployment scale, estimator/trigger knobs)")
+            if not self.workload.rhos \
+                    and self.workload.rho_source != "from_history":
+                raise ValueError(
+                    "memory fleets deploy each tenant's robust cell: "
+                    "declare rhos or rho_source='from_history'")
 
     # -- JSON round-trip ----------------------------------------------------
 
@@ -335,12 +402,15 @@ class ExperimentSpec:
         ds = {k: _tupled(v) for k, v in d.pop("design", {}).items()}
         tr = d.pop("trial", None)
         dr = d.pop("drift", None)
+        me = d.pop("memory", None)
         fa = d.pop("faults", ())
         return cls(workload=WorkloadSpec(**wl), design=DesignSpec(**ds),
                    trial=TrialSpec(**{k: _tupled(v) for k, v in tr.items()})
                    if tr is not None else None,
                    drift=DriftSpec(**{k: _tupled(v) for k, v in dr.items()})
                    if dr is not None else None,
+                   memory=MemorySpec(**{k: _tupled(v) for k, v in me.items()})
+                   if me is not None else None,
                    faults=tuple(
                        f if isinstance(f, FaultSpec)
                        else FaultSpec(**{k: _tupled(v) for k, v in f.items()})

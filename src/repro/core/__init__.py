@@ -16,9 +16,9 @@ from .batch import (build_results, solve_grid, tune_nominal_many,
                     tune_robust_many)
 from .designs import (ENGINE_POLICIES, LAZY_LEVELING_FILL, DesignSpace,
                       describe, policy_effective_phi, to_phi, to_phi_policy)
-from .lsm_cost import (LSMSystem, Phi, cost_vector, expected_cost,
-                       leveling_phi, make_phi, num_levels, throughput,
-                       tiering_phi)
+from .lsm_cost import (LSMSystem, Phi, cost_across_memory, cost_vector,
+                       expected_cost, leveling_phi, make_phi, num_levels,
+                       throughput, tiering_phi)
 from .metrics import delta_throughput, delta_throughput_batch, throughput_range
 from .nominal import TuningResult, tune_nominal, tune_nominal_slsqp
 from .robust import (dual_solve_cold, dual_solve_warm, primal_worst_case,
@@ -30,7 +30,8 @@ from .workload import (kl_divergence, rho_from_history, rho_from_pair,
 
 __all__ = [
     "DesignSpace", "LSMSystem", "Phi", "TuningResult",
-    "cost_vector", "expected_cost", "throughput", "num_levels",
+    "cost_vector", "cost_across_memory", "expected_cost", "throughput",
+    "num_levels",
     "make_phi", "leveling_phi", "tiering_phi", "describe", "to_phi",
     "to_phi_policy", "ENGINE_POLICIES", "policy_effective_phi",
     "tune_nominal", "tune_nominal_slsqp", "tune_robust", "tune_robust_slsqp",

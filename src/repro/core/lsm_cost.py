@@ -102,8 +102,13 @@ class Phi:
         return Phi(T=T, mfilt_bits=self.mfilt_bits, K=K)
 
 
-def mbuf_bits(phi: Phi, sys: LSMSystem) -> jnp.ndarray:
-    return sys.m_total_bits - phi.mfilt_bits
+def mbuf_bits(phi: Phi, sys: LSMSystem, m_total_bits=None) -> jnp.ndarray:
+    """Buffer memory = total budget - filter bits.  ``m_total_bits``
+    overrides the system's static budget with a *traced* value — the hook
+    the fleet memory arbiter sweeps per-tenant budgets through without
+    recompiling per candidate (``sys`` stays a static closure constant)."""
+    mtot = sys.m_total_bits if m_total_bits is None else m_total_bits
+    return mtot - phi.mfilt_bits
 
 
 def num_levels(T: jnp.ndarray, mbuf: jnp.ndarray, sys: LSMSystem,
@@ -193,7 +198,8 @@ def write_cost(phi: Phi, sys: LSMSystem, smooth: bool = False) -> jnp.ndarray:
     return sys.f_seq * (1.0 + sys.f_a) / sys.B * jnp.sum(m * per_level)
 
 
-def cost_vector(phi: Phi, sys: LSMSystem, smooth: bool = False) -> jnp.ndarray:
+def cost_vector(phi: Phi, sys: LSMSystem, smooth: bool = False,
+                m_total_bits=None) -> jnp.ndarray:
     """c(Phi) = (Z0, Z1, Q, W), paper Section 3.
 
     Fused implementation: identical formulas to the four component functions
@@ -201,9 +207,13 @@ def cost_vector(phi: Phi, sys: LSMSystem, smooth: bool = False) -> jnp.ndarray:
     (L, per-level FPRs, level mask, clamped K) are computed once instead of
     once per component — this sits on the tuners' innermost hot path, where it
     runs at every Adam step for every (workload, rho, start) lane.
+
+    ``m_total_bits`` (traced) replaces ``sys.m_total_bits`` — the memory
+    axis the fleet arbiter differentiates tenants along; ``None`` (default)
+    is bit-identical to the two-argument form.
     """
     T = jnp.maximum(phi.T, 1.0 + 1e-6)
-    mbuf_raw = mbuf_bits(phi, sys)
+    mbuf_raw = mbuf_bits(phi, sys, m_total_bits)
     mbuf = jnp.maximum(mbuf_raw, sys.min_buf_bits)
     L = num_levels(T, mbuf_raw, sys, smooth=smooth)
     i = jnp.arange(1, sys.max_levels + 1, dtype=phi.T.dtype)
@@ -251,6 +261,30 @@ def expected_cost(w: jnp.ndarray, phi: Phi, sys: LSMSystem,
 def throughput(w: jnp.ndarray, phi: Phi, sys: LSMSystem) -> jnp.ndarray:
     """Paper Section 8.1: throughput := 1 / C(w, Phi)."""
     return 1.0 / expected_cost(w, phi, sys)
+
+
+def cost_across_memory(phi: Phi, sys: LSMSystem,
+                       budgets_bpe: jnp.ndarray,
+                       smooth: bool = False) -> jnp.ndarray:
+    """``(G, 4)`` cost vectors of ``phi`` re-deployed at each per-entry
+    memory budget in ``budgets_bpe`` (bits/entry), holding the tuning's
+    filter/buffer *split fraction* fixed while the total scales.
+
+    This is the marginal-benefit curve the fleet memory arbiter scores
+    tenants with: the true post-re-tune cost re-optimizes the split under
+    the granted budget, so the fixed-fraction curve is a (tight,
+    conservative) upper bound on it.  One vmap over the budget grid; the
+    budget is traced (see :func:`cost_vector`), so every tenant/grid
+    combination shares a single compilation."""
+    b = jnp.asarray(budgets_bpe, jnp.float32)
+
+    def at(budget):
+        scale = budget / sys.bits_per_entry
+        phi_b = Phi(T=phi.T, mfilt_bits=phi.mfilt_bits * scale, K=phi.K)
+        return cost_vector(phi_b, sys, smooth=smooth,
+                           m_total_bits=budget * sys.N)
+
+    return jax.vmap(at)(b)
 
 
 # ---------------------------------------------------------------------------

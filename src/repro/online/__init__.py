@@ -14,13 +14,20 @@ a static input.  This package closes the loop on top of the existing stack:
   ``repro.checkpoint.store.retune_storm``;
 * **drive** (:mod:`repro.online.session`) — :class:`OnlineSession` swaps
   tunings at flush boundaries via ``LSMTree.retune``; :func:`execute_drift`
-  runs whole drift experiments (the ``repro.api`` `DriftSpec` lowering).
+  runs whole drift experiments (the ``repro.api`` `DriftSpec` lowering);
+* **arbitrate** (:mod:`repro.online.memory`) — fleet-level memory as a
+  single global budget: :class:`MemoryBudget` / :class:`FleetArbiter`
+  divide it across tenants by marginal cost-model benefit and re-divide on
+  the drift triggers; :func:`execute_memory_fleet` runs whole arbitration
+  experiments (the ``repro.api`` `MemorySpec` lowering).
 """
 
 from .estimate import (ESTIMATORS, EWMAEstimator, SlidingWindowEstimator,
                        WindowHistory, kl_np, make_estimator,
                        normalize_counts, rho_from_history_batch,
                        rho_from_windows, smooth_mix)
+from .memory import (MEMORY_ARMS, FleetArbiter, MemoryBudget, divide_budget,
+                     execute_memory_fleet, memory_cost_curves)
 from .retune import DriftPolicy, RetuneRequest, retune_fleet
 from .session import (ARMS, DriftArmResult, OnlineSession, SegmentRecord,
                       execute_drift)
@@ -32,4 +39,6 @@ __all__ = [
     "DriftPolicy", "RetuneRequest", "retune_fleet",
     "ARMS", "OnlineSession", "SegmentRecord", "DriftArmResult",
     "execute_drift",
+    "MEMORY_ARMS", "MemoryBudget", "FleetArbiter", "divide_budget",
+    "memory_cost_curves", "execute_memory_fleet",
 ]

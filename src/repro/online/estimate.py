@@ -101,8 +101,14 @@ class WindowHistory:
         return normalize_counts(self.counts(last))
 
     def total_mix(self, last: Optional[int] = None) -> np.ndarray:
-        """Count-weighted mix over the newest ``last`` windows."""
-        return normalize_counts(self.counts(last).sum(axis=0))[0]
+        """Count-weighted mix over the newest ``last`` windows.  An empty
+        (or all-zero) history has no evidence and estimates uniform — the
+        only mix that biases no query class, and a proper distribution for
+        downstream KL centers (all-zero would not be)."""
+        c = self.counts(last).sum(axis=0)
+        if c.sum() <= 0:
+            return np.full(4, 0.25)
+        return normalize_counts(c)[0]
 
 
 class SlidingWindowEstimator:
@@ -132,6 +138,8 @@ class EWMAEstimator:
     def estimate(self, history: WindowHistory) -> np.ndarray:
         mixes = history.mixes()                     # chronological
         n = len(mixes)
+        if n == 0:                 # no evidence: uniform, like total_mix
+            return np.full(4, 0.25)
         w = self.alpha * (1.0 - self.alpha) ** np.arange(n - 1, -1, -1.0)
         w /= w.sum()
         return w @ mixes
@@ -159,8 +167,11 @@ def rho_from_windows(counts, center=None, floor: float = 0.0) -> float:
     mean mix (exactly :func:`repro.core.rho_from_history` on the normalized
     rows), or pass the estimator's current mix to budget the spread around
     the tuning target.  ``floor`` clamps the result away from zero so a
-    perfectly steady history still leaves a hedge."""
+    perfectly steady history still leaves a hedge.  An empty history has
+    measured no drift: the budget is exactly the floor."""
     mixes = normalize_counts(counts)
+    if mixes.shape[0] == 0 or not np.any(np.asarray(counts)):
+        return float(floor)
     c = mixes.mean(axis=0) if center is None else \
         normalize_counts(center)[0]
     return float(max(kl_np(mixes, c).max(), floor))
@@ -183,6 +194,8 @@ def rho_from_history_batch(expected, counts, floor: float = 0.0):
     if C.ndim != 3 or C.shape[0] != E.shape[0] or C.shape[-1] != 4:
         raise ValueError(f"counts must be (F, W, 4) matching expected "
                          f"(F, 4); got {C.shape} vs {E.shape}")
+    if C.shape[1] == 0:            # no windows observed: no measured drift
+        return np.full(E.shape[0], floor, np.float64)
     mixes = C / np.maximum(C.sum(axis=-1, keepdims=True), 1e-30)
     kls = kl_divergence(jnp.asarray(mixes), jnp.asarray(E[:, None, :]))
     return np.maximum(np.asarray(kls).max(axis=-1), floor)

@@ -142,9 +142,15 @@ class OnlineSession:
         req, self._pending = self._pending, None
         return req
 
-    def apply(self, tuning, w_center, rho: float, reason: str) -> None:
+    def apply(self, tuning, w_center, rho: float, reason: str,
+              sys=None) -> None:
         """Swap the deployed tuning (at a flush boundary) and re-center the
-        drift reference on what the new tuning was derived for."""
+        drift reference on what the new tuning was derived for.  ``sys``
+        replaces the session's live system first — the fleet memory arbiter
+        re-tunes a tenant *under a new memory share*, so the system the
+        tuning was solved against must land with it."""
+        if sys is not None:
+            self.sys = sys
         self.tree.retune(tuning.phi, self.sys)
         self.expected = np.asarray(w_center, np.float64)
         self.rho = float(rho)

@@ -1,0 +1,104 @@
+"""Doc-link lint: every path the documentation points at must exist.
+
+Two classes of reference are checked across ``README.md`` and every page
+under ``docs/``:
+
+* relative markdown links — ``[text](docs/online.md)``, ``[x](../README.md)``
+  — resolved against the file that contains them (external ``http(s)://`` /
+  ``mailto:`` targets and pure ``#anchor`` links are skipped);
+* repo-path mentions — any ``src/...``, ``benchmarks/...``, ``tests/...`` or
+  ``docs/...`` token in the prose or code spans.  Tokens containing ``*``
+  are treated as globs and must match at least one file.
+
+Runs under the tier-1 suite (so CI enforces it) and directly as a script::
+
+    python tests/test_doc_links.py
+"""
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: [text](target) — target captured up to the closing paren or an anchor.
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+#: repo paths mentioned in prose/code spans (globs allowed via ``*``).
+_REPO_PATH = re.compile(
+    r"(?:src|benchmarks|tests|docs)/[A-Za-z0-9_.\-/*]+")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files():
+    files = [os.path.join(ROOT, "README.md")]
+    files += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def _broken_in(path):
+    """Yield (kind, target) for every dangling reference in one file."""
+    text = open(path, encoding="utf-8").read()
+    base = os.path.dirname(path)
+    seen = set()
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1).split("#", 1)[0]
+        if not target or target.startswith(_EXTERNAL) or target in seen:
+            continue
+        seen.add(target)
+        if not os.path.exists(os.path.normpath(os.path.join(base, target))):
+            yield "link", target
+    for token in _REPO_PATH.findall(text):
+        token = token.rstrip(".,:;")        # sentence punctuation, ellipses
+        if not token or token in seen:
+            continue
+        seen.add(token)
+        full = os.path.join(ROOT, token)
+        if "*" in token:
+            if not glob.glob(full):
+                yield "glob", token
+        elif not os.path.exists(full):
+            yield "path", token
+
+
+def lint():
+    """Return human-readable problem lines (empty list == clean)."""
+    problems = []
+    files = doc_files()
+    for f in files:
+        rel = os.path.relpath(f, ROOT)
+        problems.extend(f"{rel}: dangling {kind} -> {target}"
+                        for kind, target in _broken_in(f))
+    return files, problems
+
+
+def test_docs_exist():
+    files, _ = lint()
+    names = {os.path.relpath(f, ROOT) for f in files}
+    assert "README.md" in names, "repo front door README.md is missing"
+    assert "docs/memory.md" in names
+    assert len([n for n in names if n.startswith("docs/")]) >= 6
+
+
+def test_no_dangling_doc_references():
+    _, problems = lint()
+    assert not problems, "\n".join(problems)
+
+
+def test_lint_catches_planted_breakage(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("see [x](no/such.md), `src/repro/missing_mod.py`, "
+                   "and benchmarks/bench_none_*.py\n")
+    found = dict(_broken_in(str(bad)))
+    assert found == {"link": "no/such.md",
+                     "path": "src/repro/missing_mod.py",
+                     "glob": "benchmarks/bench_none_*.py"}
+
+
+if __name__ == "__main__":
+    files, problems = lint()
+    for p in problems:
+        print(p)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if problems else 'ok'}")
+    sys.exit(1 if problems else 0)

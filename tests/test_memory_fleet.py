@@ -1,0 +1,225 @@
+"""Tests for fleet-level memory arbitration (repro.online.memory).
+
+Covers the budget semantics (grid/units/validation), the deterministic
+greedy division against hand-crafted marginal curves, the traced-budget
+cost sweep (bit-identical to the plain cost vector at the current budget),
+the MemorySpec axis (validation + JSON round-trip), and the execution
+invariants the bench gates: with arbitration disabled the arbitrated fleet
+is bit-identical to the static fleet, and the static fleet is bit-identical
+to the drift driver's ``static_robust`` arm (the "today's fixed-split
+path" anchor).
+
+Solver sizes match test_online_drift's SMALL so the jit cache is shared;
+the end-to-end experiment runs once per module (fixture-cached)."""
+
+import numpy as np
+import pytest
+
+from repro.core import LSMSystem, cost_across_memory, cost_vector, make_phi
+from repro.online import MEMORY_ARMS, MemoryBudget, divide_budget
+
+SMALL = dict(n_starts=8, steps=60, seed=3)
+SYS_PAIRS = (("N", 8000.0), ("entry_bits", 512.0), ("bits_per_entry", 6.0),
+             ("min_buf_bits", 512.0 * 64), ("max_T", 20.0))
+SYS = LSMSystem().replace(**dict(SYS_PAIRS))
+
+#: tenant mixes: write-heavy w4 vs read-bimodal w5 (maximally skewed fleet)
+TENANTS = ((0.01, 0.01, 0.01, 0.97), (0.49, 0.49, 0.01, 0.01))
+
+
+def _api():
+    from repro import api
+    return api
+
+
+# ---------------------------------------------------------------------------
+# Budget semantics
+# ---------------------------------------------------------------------------
+
+def test_memory_budget_grid_and_units():
+    b = MemoryBudget(total_bpe=12.0, floor_bpe=2.0, quantum_bpe=1.0)
+    b.validate(2)
+    assert b.units(2) == 8
+    grid = b.grid(2)
+    assert grid[0] == 2.0 and grid[-1] == 10.0 and len(grid) == 9
+    # a 3-tenant fleet has fewer free quanta on the same total
+    assert b.units(3) == 6
+    with pytest.raises(ValueError):
+        b.validate(7)                  # 7 * 2.0 > 12.0
+    with pytest.raises(ValueError):
+        MemoryBudget(total_bpe=8.0, floor_bpe=0.0)
+    with pytest.raises(ValueError):
+        MemoryBudget(total_bpe=8.0, quantum_bpe=-1.0)
+
+
+def test_divide_budget_greedy_marginals():
+    b = MemoryBudget(total_bpe=8.0, floor_bpe=1.0, quantum_bpe=1.0)
+    grid = b.grid(2)
+    assert len(grid) == 7              # 1..7 bits/entry
+    # tenant 0's cost drops 1.0 per quantum, tenant 1's only 0.1: every
+    # free quantum goes to tenant 0 (up to the grid cap)
+    steep = 10.0 - 1.0 * np.arange(7)
+    flat = 10.0 - 0.1 * np.arange(7)
+    shares = divide_budget(np.stack([steep, flat]), np.ones(2), b)
+    assert shares.tolist() == [7.0, 1.0]
+    assert shares.sum() == b.total_bpe
+    # traffic weights tilt the division: tenant 1 serving 100x the ops
+    # outweighs the 10x marginal-cost gap
+    shares_w = divide_budget(np.stack([steep, flat]),
+                             np.array([1.0, 100.0]), b)
+    assert shares_w.tolist() == [1.0, 7.0]
+    # equal curves: deterministic lowest-index tie-break, still exhaustive
+    shares_eq = divide_budget(np.stack([steep, steep]), np.ones(2), b)
+    assert shares_eq.sum() == b.total_bpe
+    assert shares_eq[0] >= shares_eq[1]
+
+
+def test_divide_budget_is_exchange_optimal_on_convex_curves():
+    """On convex decreasing curves the greedy matches brute force."""
+    b = MemoryBudget(total_bpe=9.0, floor_bpe=1.0, quantum_bpe=1.0)
+    g = np.arange(7, dtype=np.float64)
+    curves = np.stack([5.0 * 0.5 ** g, 4.0 / (1.0 + g), 3.0 - 0.3 * g])
+    w = np.array([1.0, 2.0, 0.5])
+    shares = divide_budget(curves, w, b)
+    best, best_cost = None, np.inf
+    for a0 in range(7):
+        for a1 in range(7 - a0):
+            a2 = 6 - a0 - a1
+            cost = (w * curves[[0, 1, 2], [a0, a1, a2]]).sum()
+            if cost < best_cost - 1e-12:
+                best, best_cost = (a0, a1, a2), cost
+    assert shares.tolist() == [1.0 + q for q in best]
+
+
+# ---------------------------------------------------------------------------
+# The traced-budget cost sweep
+# ---------------------------------------------------------------------------
+
+def test_cost_across_memory_anchors_and_monotone():
+    phi = make_phi(4.0, 3.0 * SYS.N, 1.0, SYS)
+    grid = np.array([2.0, 4.0, 6.0, 8.0, 10.0])
+    curves = np.asarray(cost_across_memory(phi, SYS, grid), np.float64)
+    assert curves.shape == (5, 4)
+    # at the system's own budget the sweep IS the plain cost vector
+    c0 = np.asarray(cost_vector(phi, SYS), np.float64)
+    np.testing.assert_array_equal(curves[2], c0)
+    # more memory never hurts any tenant mix (modeled costs nonincreasing)
+    for w in TENANTS + ((0.25, 0.25, 0.25, 0.25),):
+        exp = curves @ np.asarray(w)
+        assert np.all(np.diff(exp) <= 1e-9), (w, exp)
+
+
+# ---------------------------------------------------------------------------
+# The spec axis
+# ---------------------------------------------------------------------------
+
+def _mem_spec(enabled=True, with_memory=True):
+    api = _api()
+    memory = api.MemorySpec(enabled=enabled, floor_bits_per_entry=2.0,
+                            quantum_bits_per_entry=1.0, min_windows=1,
+                            cooldown=1) if with_memory else None
+    return api.ExperimentSpec(
+        name="mem_test",
+        workload=api.WorkloadSpec(workloads=TENANTS, nominal=False,
+                                  rhos=(0.5,)),
+        design=api.DesignSpec(**SMALL),
+        drift=api.DriftSpec(kind="flip", segments=4, n_queries=200,
+                            target=(0.33, 0.33, 0.33, 0.01), n_keys=4000,
+                            key_space=2 ** 20, arms=("static_robust",),
+                            estimator="window", window=4, capacity=32,
+                            kl_threshold=0.1, min_windows=1, cooldown=1,
+                            retune_starts=8, retune_steps=60),
+        memory=memory, system=SYS_PAIRS)
+
+
+def test_memory_spec_validation_and_roundtrip():
+    api = _api()
+    spec = _mem_spec()
+    assert api.ExperimentSpec.from_json(spec.to_json()) == spec
+    # memory without drift is rejected
+    with pytest.raises(ValueError, match="drift"):
+        api.ExperimentSpec(
+            name="bad", workload=api.WorkloadSpec(workloads=TENANTS,
+                                                  rhos=(0.5,)),
+            memory=api.MemorySpec())
+    # memory without a robust cell is rejected
+    with pytest.raises(ValueError, match="robust"):
+        api.ExperimentSpec(
+            name="bad",
+            workload=api.WorkloadSpec(workloads=TENANTS, nominal=True),
+            drift=spec.drift, memory=api.MemorySpec())
+    for bad in (dict(floor_bits_per_entry=0.0),
+                dict(quantum_bits_per_entry=0.0),
+                dict(total_bits_per_entry=-1.0),
+                dict(rebalance_kl=0.0), dict(min_windows=0)):
+        with pytest.raises(ValueError):
+            api.MemorySpec(**bad)
+
+
+# ---------------------------------------------------------------------------
+# Execution invariants (one cached end-to-end run)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mem_reports():
+    api = _api()
+    on = api.run_experiment(_mem_spec(enabled=True))
+    off = api.run_experiment(_mem_spec(enabled=False))
+    drift_only = api.run_experiment(_mem_spec(with_memory=False))
+    return on, off, drift_only
+
+
+def _record_tuple(rec):
+    return (rec.index, rec.avg_io_per_query, rec.queries, rec.windows,
+            tuple(rec.observed_mix.tolist()))
+
+
+def test_memory_fleet_results_shape(mem_reports):
+    on, _, _ = mem_reports
+    assert set(on.memory) == {(f, arm) for f in range(len(TENANTS))
+                              for arm in MEMORY_ARMS}
+    assert on.memory_events, "enabled arbitration must log its divisions"
+    ev0 = on.memory_events[0]
+    assert ev0["segment"] == -1 and ev0["reason"] == "initial_division"
+    total = sum(ev0["shares"])
+    assert total == pytest.approx(len(TENANTS) * SYS.bits_per_entry)
+    # fleet rows render (the bench's metric source)
+    names = {r.name for r in on.rows()}
+    assert "mem_test_memory_fleet" in names
+    assert "mem_test_memory_w0_arbitrated" in names
+    # drift arms are replaced by the memory fleets, not run alongside
+    assert not on.drift
+
+
+def test_memory_disabled_is_bit_identical_to_static(mem_reports):
+    _, off, _ = mem_reports
+    assert off.memory_events == []
+    for f in range(len(TENANTS)):
+        static = off.memory[(f, "static")].records
+        arb = off.memory[(f, "arbitrated")].records
+        assert [_record_tuple(r) for r in static] \
+            == [_record_tuple(r) for r in arb]
+    assert off.memory_fleet_throughput("static") \
+        == off.memory_fleet_throughput("arbitrated")
+
+
+def test_memory_static_fleet_matches_drift_static_robust(mem_reports):
+    """The static fleet IS today's fixed-split path: bit-identical to the
+    drift driver's static_robust arm on the same spec."""
+    _, off, drift_only = mem_reports
+    for f in range(len(TENANTS)):
+        static = off.memory[(f, "static")].records
+        robust = drift_only.drift[(f, "static_robust")].records
+        assert [_record_tuple(r) for r in static] \
+            == [_record_tuple(r) for r in robust]
+
+
+def test_memory_runs_on_sharded_and_subprocess_backends():
+    """run_memory is the shared sequential driver on every real backend;
+    the remote stub must refuse rather than silently run locally."""
+    api = _api()
+    base = api.ExecutionBackend.run_memory
+    assert api.ShardedBackend.run_memory is base
+    assert api.SubprocessBackend.run_memory is base
+    with pytest.raises(NotImplementedError):
+        api.RemoteBackend().run_memory(None, None)

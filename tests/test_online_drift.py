@@ -135,6 +135,71 @@ def test_window_history_ring_and_estimators():
     assert np.array_equal(h.counts(), h2.counts())
 
 
+def test_window_history_empty_and_single_window():
+    """An empty history is evidence-free: estimators fall back to uniform
+    and the rho sources return exactly their floor."""
+    h = WindowHistory(capacity=8)
+    assert len(h) == 0 and h.total_windows == 0
+    assert h.counts().shape == (0, 4)
+    uniform = np.full(4, 0.25)
+    assert np.array_equal(h.total_mix(), uniform)
+    assert np.array_equal(SlidingWindowEstimator(window=4).estimate(h),
+                          uniform)
+    assert np.array_equal(EWMAEstimator(alpha=0.5).estimate(h), uniform)
+    assert rho_from_windows(h.counts(), floor=0.125) == 0.125
+    assert rho_from_windows(h.counts()) == 0.0
+    # all-zero counts carry no evidence either
+    assert np.array_equal(WindowHistory(capacity=2).total_mix(), uniform)
+    assert rho_from_windows(np.zeros((3, 4)), floor=0.125) == 0.125
+    # a single window: both estimators return exactly its mix, and the
+    # budget against the mean center is zero (clamped to the floor)
+    h.append([10, 30, 40, 20])
+    one = np.array([0.1, 0.3, 0.4, 0.2])
+    assert SlidingWindowEstimator(window=4).estimate(h) \
+        == pytest.approx(one)
+    assert EWMAEstimator(alpha=0.5).estimate(h) == pytest.approx(one)
+    assert rho_from_windows(h.counts(), floor=0.01) == 0.01
+    # ...but against an explicit center it is the measured divergence
+    center = np.full(4, 0.25)
+    assert rho_from_windows(h.counts(), center=center) \
+        == pytest.approx(float(kl_np(one, center)))
+
+
+def test_window_history_capacity_wrap_batches():
+    """Batch appends at and beyond capacity keep exactly the newest rows."""
+    rows = np.array([[i, 1, 1, 1] for i in range(10)])
+    exact = WindowHistory(capacity=5)
+    exact.append(rows[:5])                     # batch == capacity
+    assert len(exact) == 5 and exact.total_windows == 5
+    assert np.array_equal(exact.counts()[:, 0], np.arange(5))
+    exact.append(rows[5])                      # next row wraps the ring
+    assert len(exact) == 5 and exact.total_windows == 6
+    assert np.array_equal(exact.counts()[:, 0], np.arange(1, 6))
+    over = WindowHistory(capacity=5)
+    over.append(rows)                          # batch > capacity
+    assert len(over) == 5 and over.total_windows == 10
+    assert np.array_equal(over.counts()[:, 0], np.arange(5, 10))
+    # `last` never exceeds the live rows
+    assert over.counts(last=99).shape == (5, 4)
+    assert np.array_equal(over.counts(last=2)[:, 0], [8, 9])
+
+
+def test_rho_from_history_batch_edge_shapes():
+    E = np.array([[0.25, 0.25, 0.25, 0.25], [0.7, 0.1, 0.1, 0.1]])
+    # zero observed windows: no measured drift anywhere, budgets == floor
+    empty = rho_from_history_batch(E, np.zeros((2, 0, 4)), floor=0.05)
+    assert np.array_equal(empty, np.full(2, 0.05))
+    # a single window per tree matches the scalar path
+    C = np.array([[[10, 10, 10, 10]], [[70, 10, 10, 10]]], np.float64)
+    rhos = rho_from_history_batch(E, C, floor=0.0)
+    assert rhos == pytest.approx([0.0, 0.0], abs=1e-7)
+    # shape mismatches are loud, not broadcast accidents
+    with pytest.raises(ValueError, match="counts"):
+        rho_from_history_batch(E, np.zeros((3, 2, 4)))
+    with pytest.raises(ValueError, match="counts"):
+        rho_from_history_batch(E, np.zeros((2, 4)))
+
+
 # ---------------------------------------------------------------------------
 # Policy triggers
 # ---------------------------------------------------------------------------
