@@ -96,6 +96,14 @@ CHECK_METRICS = {
         "memory_summary.claim_arbitrated_ge_static": "higher",
         "memory_summary.claim_disabled_identical": "higher",
     },
+    "scenarios": {
+        "scenarios_fleet.engine_s": "lower",
+        # bools: the robust hedge survives every named stress pattern,
+        # and every adversary window's realized model cost stays under
+        # the independently-solved KL dual bound (Eq. 13, measured live)
+        "scenarios_summary.claim_robust_ge_stale": "higher",
+        "scenarios_summary.claim_regret_le_dual_bound": "higher",
+    },
 }
 
 #: --check exit codes: regression vs misconfiguration (missing baseline /
@@ -123,6 +131,7 @@ SUITE_MODULES = [
     ("online", "bench_online_drift"),
     ("faults", "bench_faults"),
     ("memory", "bench_memory_fleet"),
+    ("scenarios", "bench_scenarios"),
 ]
 
 

@@ -171,7 +171,10 @@ class ExecutionBackend:
         dispatch across the whole fleet)."""
         from repro.online import execute_drift
         t0 = time.time()
-        report.drift.update(execute_drift(plan))
+        results, regret = execute_drift(plan)
+        report.drift.update(results)
+        for widx, recs in regret.items():
+            report.regret.setdefault(widx, []).extend(recs)
         report.walls["drift_s"] = time.time() - t0
 
     def run_memory(self, plan, report: Report) -> None:

@@ -202,6 +202,14 @@ class DriftSpec:
     expected -> target), ``"flip"`` (abrupt switch at mid-schedule),
     ``"cyclic"`` (alternate expected / target per segment), or
     ``"schedule"`` (take ``schedule`` rows verbatim, one per segment).
+    Scenario kinds (:data:`repro.scenarios.SCENARIO_KINDS`:
+    ``zipf_migrate`` / ``burst_storm`` / ``tombstone_churn`` /
+    ``scan_heavy`` / ``adversary``) delegate the schedule — and session
+    shaping like Zipf skew, burst volume, delete fraction, scan span — to
+    the scenario generator; ``scenario_params`` overrides its knobs and
+    ``target`` (optional here) overrides its default drift target.  The
+    ``adversary`` kind picks every segment's mix live: the worst workload
+    inside the deployed tuning's rho-ball (see ``docs/scenarios.md``).
 
     **Arms** — any of ``repro.online.ARMS``: ``stale_nominal`` deploys the
     workload's nominal cell and never re-tunes; ``static_robust`` deploys
@@ -224,6 +232,9 @@ class DriftSpec:
     n_queries: int = 1000
     target: Optional[Tuple[float, ...]] = None
     schedule: Optional[Tuple[Tuple[float, ...], ...]] = None
+    #: scenario-kind knobs as (name, value) pairs, validated against the
+    #: generator's declared PARAMS (see repro.scenarios)
+    scenario_params: Pairs = ()
     arms: Tuple[str, ...] = ("stale_nominal", "static_robust", "online",
                              "oracle")
     # deployment (TrialSpec conventions)
@@ -246,23 +257,48 @@ class DriftSpec:
     min_windows: int = 2
     cooldown: int = 1
     rho_floor: float = 0.05
+    #: change-point detector beside the KL triggers: "kl" (none extra) or
+    #: "page_hinkley" (mean-shift detector over per-segment observed KL —
+    #: catches burst storms the windowed estimator dilutes)
+    detector: str = "kl"
+    ph_delta: float = 0.005
+    ph_lambda: float = 0.25
     # re-tune solver
     retune_starts: int = 32
     retune_steps: int = 200
     retune_seed: int = 0
 
     def __post_init__(self):
-        if self.kind not in ("gradual", "flip", "cyclic", "schedule"):
-            raise ValueError(f"unknown drift kind {self.kind!r}")
+        # lazy: repro.scenarios is numpy-only, but spec loading must not
+        # pull it in for the classic kinds' jax-free worker processes
+        from repro.scenarios import SCENARIO_KINDS, get_scenario
+        classic = ("gradual", "flip", "cyclic", "schedule")
+        if self.kind not in classic and self.kind not in SCENARIO_KINDS:
+            raise ValueError(f"unknown drift kind {self.kind!r}; classic "
+                             f"kinds {classic} or scenario kinds "
+                             f"{sorted(SCENARIO_KINDS)}")
         if self.kind == "schedule":
             if self.schedule is None or len(self.schedule) != self.segments:
                 raise ValueError("kind='schedule' needs one schedule row "
                                  "per segment")
             if any(len(row) != 4 for row in self.schedule):
                 raise ValueError("schedule rows must be 4-class mixes")
+        elif self.kind in SCENARIO_KINDS:
+            # target overrides the scenario's default drift target; the
+            # generator's constructor validates knob names and ranges
+            if self.target is not None and len(self.target) != 4:
+                raise ValueError("target must be a 4-class mix")
+            get_scenario(self)
         elif self.target is None or len(self.target) != 4:
             raise ValueError(f"kind={self.kind!r} needs a 4-class target "
                              "mix")
+        if self.scenario_params and self.kind not in SCENARIO_KINDS:
+            raise ValueError(f"scenario_params only apply to scenario "
+                             f"kinds {sorted(SCENARIO_KINDS)}, not "
+                             f"{self.kind!r}")
+        if self.detector not in ("kl", "page_hinkley"):
+            raise ValueError(f"unknown detector {self.detector!r}; use "
+                             "'kl' or 'page_hinkley'")
         if self.segments < 1:
             raise ValueError("segments must be >= 1")
         bad = set(self.arms) - {"stale_nominal", "static_robust", "online",
@@ -379,6 +415,11 @@ class ExperimentSpec:
                     "memory arbitration rides the drift schedule: a "
                     "MemorySpec needs a DriftSpec (tenants, schedules, "
                     "deployment scale, estimator/trigger knobs)")
+            if self.drift.kind == "adversary":
+                raise ValueError(
+                    "kind='adversary' solves its mix against a drift "
+                    "defender arm per segment; memory fleets have no such "
+                    "arm — use a trace-shaped scenario kind instead")
             if not self.workload.rhos \
                     and self.workload.rho_source != "from_history":
                 raise ValueError(

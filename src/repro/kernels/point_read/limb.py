@@ -1,0 +1,135 @@
+"""splitmix64 on 32-bit limbs: the TPU-portable Bloom hash.
+
+The dense reference (``ref.py``) and the Pallas kernel both hash with
+native uint64 splitmix64, which confines them to x64-capable backends —
+TPU vector units have no 64-bit integer lanes (``docs/kernels.md``).
+This module re-expresses the exact same function over pairs of uint32
+limbs ``(lo, hi)`` using only 32-bit adds, multiplies, shifts and
+selects, so the hash tier of the fused point-read kernel is expressible
+on hardware without uint64.  Every op is wrap-around mod 2^32 (uint32
+semantics), and the composition is *bit-identical* to
+``lsm.bloom.splitmix64`` — the test suite checks all 64 bits against the
+numpy engine hash, plus the reduced ``% n_bits`` positions the filter
+probe actually consumes.
+
+The mod reduction (``mod_limbs``) is 32 steps of shift-and-conditional-
+subtract after a native 32-bit remainder of the high limb: it needs the
+modulus below 2^31 (so ``2*r + bit`` cannot wrap), which every per-run
+filter size satisfies by orders of magnitude.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+_GAMMA = 0x9E3779B97F4A7C15
+_MUL1 = 0xBF58476D1CE4E5B9
+_MUL2 = 0x94D049BB133111EB
+_MASK32 = 0xFFFFFFFF
+
+
+def to_limbs(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side uint64 array -> (lo, hi) uint32 limb arrays."""
+    x = np.asarray(x, np.uint64)
+    lo = (x & np.uint64(_MASK32)).astype(np.uint32)
+    hi = (x >> np.uint64(32)).astype(np.uint32)
+    return lo, hi
+
+
+def from_limbs(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """Host-side (lo, hi) uint32 limbs -> uint64 array."""
+    return (np.asarray(hi, np.uint64) << np.uint64(32)) \
+        | np.asarray(lo, np.uint64)
+
+
+def split64_jnp(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """uint64 jnp array -> (lo, hi) uint32 limbs (x64 mode only; the entry
+    point for callers that still hold native uint64 keys)."""
+    lo = (x & jnp.uint64(_MASK32)).astype(jnp.uint32)
+    hi = (x >> jnp.uint64(32)).astype(jnp.uint32)
+    return lo, hi
+
+
+def _add64(alo, ahi, blo, bhi):
+    """(a + b) mod 2^64 on limbs; the carry is ``lo < alo`` (uint32 adds
+    wrap, so overflow shows as the sum dipping below an addend)."""
+    lo = alo + blo
+    carry = (lo < alo).astype(jnp.uint32)
+    return lo, ahi + bhi + carry
+
+
+def _mul32x32(a, b):
+    """Full 32x32 -> 64 product as (lo, hi) limbs via 16-bit halves.
+
+    ``mid`` accumulates three <= 0xFFFF-ish terms of at most 17+16 bits —
+    it cannot wrap uint32 — and carries into the high limb."""
+    al = a & jnp.uint32(0xFFFF)
+    ah = a >> jnp.uint32(16)
+    bl = b & jnp.uint32(0xFFFF)
+    bh = b >> jnp.uint32(16)
+    ll = al * bl
+    lh = al * bh
+    hl = ah * bl
+    hh = ah * bh
+    mid = (ll >> jnp.uint32(16)) + (lh & jnp.uint32(0xFFFF)) \
+        + (hl & jnp.uint32(0xFFFF))
+    lo = (ll & jnp.uint32(0xFFFF)) | (mid << jnp.uint32(16))
+    hi = hh + (lh >> jnp.uint32(16)) + (hl >> jnp.uint32(16)) \
+        + (mid >> jnp.uint32(16))
+    return lo, hi
+
+
+def _mul64(alo, ahi, blo, bhi):
+    """(a * b) mod 2^64 on limbs: the full low product plus the two cross
+    terms that land in the high limb (the hi*hi term is all mod-2^64
+    overflow and drops)."""
+    lo, hi = _mul32x32(alo, blo)
+    hi = hi + alo * bhi + ahi * blo      # wrapping uint32: exactly mod 2^32
+    return lo, hi
+
+
+def _xshr(lo, hi, s: int):
+    """Logical 64-bit right shift by static ``0 < s < 32`` on limbs."""
+    lo2 = (lo >> jnp.uint32(s)) | (hi << jnp.uint32(32 - s))
+    hi2 = hi >> jnp.uint32(s)
+    return lo2, hi2
+
+
+def _const_limbs(v: int):
+    return jnp.uint32(v & _MASK32), jnp.uint32((v >> 32) & _MASK32)
+
+
+def splitmix64_limbs(xlo: jnp.ndarray, xhi: jnp.ndarray,
+                     seed: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Elementwise splitmix64 on uint32 limbs, bit-identical to
+    ``lsm.bloom.splitmix64(x, seed)``.  ``seed`` is static, so the
+    ``seed * GAMMA`` offset folds to a host-side constant."""
+    off = (int(seed) * _GAMMA) & 0xFFFFFFFFFFFFFFFF
+    zlo, zhi = _add64(xlo, xhi, *_const_limbs(off))
+    slo, shi = _xshr(zlo, zhi, 30)
+    zlo, zhi = _mul64(zlo ^ slo, zhi ^ shi, *_const_limbs(_MUL1))
+    slo, shi = _xshr(zlo, zhi, 27)
+    zlo, zhi = _mul64(zlo ^ slo, zhi ^ shi, *_const_limbs(_MUL2))
+    slo, shi = _xshr(zlo, zhi, 31)
+    return zlo ^ slo, zhi ^ shi
+
+
+def mod_limbs(lo: jnp.ndarray, hi: jnp.ndarray, m: int) -> jnp.ndarray:
+    """``(hi * 2^32 + lo) % m`` as uint32, for static ``0 < m < 2^31``.
+
+    The high limb reduces natively; its residue is then shifted left
+    through lo's 32 bits with a conditional subtract per step — the
+    invariant ``r < m < 2^31`` keeps ``2r + bit`` inside uint32."""
+    m = int(m)
+    if not 0 < m < 2 ** 31:
+        raise ValueError(f"mod_limbs needs 0 < m < 2^31, got {m}")
+    mm = jnp.uint32(m)
+    r = hi % mm
+    for i in range(31, -1, -1):
+        bit = (lo >> jnp.uint32(i)) & jnp.uint32(1)
+        r = r * jnp.uint32(2) + bit
+        r = jnp.where(r >= mm, r - mm, r)
+    return r

@@ -48,6 +48,10 @@ def point_read_level_arrays(sub_keys: np.ndarray, arena_keys: np.ndarray,
         if impl == "jnp":
             hit, enc, probes, reads, fps = point_read_level_ref(
                 keys_j, ak, av, st, wj, nb, kt)
+        elif impl == "jnp_limb":
+            # the TPU-portable hash tier: splitmix64 on uint32 limbs
+            hit, enc, probes, reads, fps = point_read_level_ref(
+                keys_j, ak, av, st, wj, nb, kt, use_limb_hash=True)
         elif impl == "pallas":
             from .kernel import point_read_level_kernel
             # Fence keys; empty runs never search, any placeholder works.

@@ -35,7 +35,7 @@ def splitmix64_jnp(x: jnp.ndarray, seed: int) -> jnp.ndarray:
 def point_read_level_ref(sub_keys: jnp.ndarray, arena_keys: jnp.ndarray,
                          arena_vals: jnp.ndarray, starts: Tuple[int, ...],
                          words: jnp.ndarray, n_bits: Tuple[int, ...],
-                         ks: Tuple[int, ...]
+                         ks: Tuple[int, ...], use_limb_hash: bool = False
                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
                                     jnp.ndarray, jnp.ndarray]:
     """Returns (hit, enc, probes_pk, reads_pk, fps_pk), each (B,).
@@ -45,11 +45,20 @@ def point_read_level_ref(sub_keys: jnp.ndarray, arena_keys: jnp.ndarray,
     matrix.  Runs are visited newest -> oldest; per-key counters add 1
     probe per run visited while unresolved, 1 read per Bloom-positive
     visit, 1 false positive per Bloom-positive visit that missed.
+
+    ``use_limb_hash`` routes the Bloom hash through the uint32-limb
+    splitmix64 (``limb.py``, bit-identical by construction and by test)
+    instead of native uint64 — the TPU-portable arithmetic path.
     """
     B = sub_keys.shape[0]
     R = len(starts) - 1
     kmax = max(ks) if R else 0
-    hs = [splitmix64_jnp(sub_keys, j + 1) for j in range(kmax)]
+    if use_limb_hash:
+        from .limb import mod_limbs, split64_jnp, splitmix64_limbs
+        xlo, xhi = split64_jnp(sub_keys)
+        hs_limb = [splitmix64_limbs(xlo, xhi, j + 1) for j in range(kmax)]
+    else:
+        hs = [splitmix64_jnp(sub_keys, j + 1) for j in range(kmax)]
 
     hit = jnp.zeros(B, bool)
     enc = jnp.zeros(B, jnp.int64)
@@ -62,7 +71,11 @@ def point_read_level_ref(sub_keys: jnp.ndarray, arena_keys: jnp.ndarray,
         probes = probes + live
         bloom_ok = jnp.ones(B, bool)
         for j in range(ks[r]):
-            hm = hs[j] % jnp.uint64(n_bits[r])
+            if use_limb_hash:
+                hm = mod_limbs(*hs_limb[j], int(n_bits[r])) \
+                    .astype(jnp.uint64)
+            else:
+                hm = hs[j] % jnp.uint64(n_bits[r])
             w = words[r, (hm >> jnp.uint64(6)).astype(jnp.int64)]
             bloom_ok &= ((w >> (hm & jnp.uint64(63)))
                          & jnp.uint64(1)).astype(bool)

@@ -197,22 +197,93 @@ class PartialCompactionPlanner(CompactionPolicy):
 
     In-level placement (eager/move/clamp) follows K-LSM, but the capacity
     trigger is disarmed on the write path: an overfull level is drained by
-    maintenance, one ``[key_lo, key_hi)`` slice at a time — a round-robin
-    cursor walks the level's fence span in ``1/parts`` strides, so each
-    trigger moves roughly ``entries/parts`` entries and costs a bounded,
-    level-capacity-independent amount of I/O (RocksDB-leveled-style
-    compaction latency, at run granularity)."""
+    maintenance, one ``[key_lo, key_hi)`` slice at a time.  ``select``
+    picks the slice:
+
+    * ``"round_robin"`` (default, byte-identical to the original planner) —
+      a cursor walks the level's fence span in ``1/parts`` strides, so each
+      trigger moves roughly ``entries/parts`` entries and costs a bounded,
+      level-capacity-independent amount of I/O (RocksDB-leveled-style
+      compaction latency, at run granularity);
+    * ``"overlap"`` — score each of the ``parts`` candidate slices by its
+      estimated *overlap* with the target level (per-run fence spans +
+      entry counts under a uniform-density assumption — metadata only,
+      planners never read key arrays) and shed the least-overlapping slice
+      first: the merge that rewrites the fewest target-level entries per
+      source entry moved, RocksDB's min-overlapping-ratio file picker at
+      slice granularity.  A per-level skip-set of slices already tried
+      since the level last changed guarantees progress (a chosen slice may
+      contain no source keys; round-robin advances past it by
+      construction, overlap must not re-pick it forever)."""
 
     has_maintenance = True
 
-    def __init__(self, cfg, parts: int = 4):
+    SELECTS = ("round_robin", "overlap")
+
+    def __init__(self, cfg, parts: int = 4, select: str = "round_robin"):
         super().__init__(cfg)
         self.parts = max(1, int(parts))
+        if select not in self.SELECTS:
+            raise ValueError(f"unknown slice selection {select!r}; "
+                             f"known: {self.SELECTS}")
+        self.select = select
         self._cursors: dict = {}        # level -> next slice start key
+        self._tried: dict = {}          # level -> slice starts tried
+        self._state: dict = {}          # level -> (entries, num_runs) seen
 
     def plan_overflow(self, occupancy, level: int,
                       lv_runs: int) -> Optional[MergePlan]:
         return None                     # maintenance drains over-capacity
+
+    def _candidates(self, lo_key: int, hi_key: int,
+                    width: int) -> List[Tuple[int, int]]:
+        """The ``parts`` slice intervals ``[lo, hi)`` tiling the fence span
+        (the last one absorbs the floor-division remainder)."""
+        out = []
+        for j in range(self.parts):
+            clo = lo_key + j * width
+            if clo > hi_key:
+                break
+            chi = hi_key + 1 if (j == self.parts - 1
+                                 or clo + width > hi_key) else clo + width
+            out.append((clo, chi))
+        return out
+
+    def _overlap_score(self, store, level: int, clo: int,
+                       chi: int) -> float:
+        """Estimated target-level entries a merge of ``[clo, chi)`` must
+        rewrite: each target run contributes its entry count times the
+        fraction of its fence span the slice covers (uniform density)."""
+        if level >= len(store.levels):      # no target level yet: free
+            return 0.0
+        tgt = store.levels[level]           # 0-indexed: level+1's runs
+        score = 0.0
+        lens = tgt.run_lens()
+        for r in range(tgt.num_runs):
+            mn = int(tgt.min_keys[r])
+            mx = int(tgt.max_keys[r])
+            inter = min(chi - 1, mx) - max(clo, mn) + 1
+            if inter > 0:
+                score += lens[r] * inter / (mx - mn + 1)
+        return score
+
+    def _pick_overlap(self, store, level: int, lo_key: int, hi_key: int,
+                      width: int) -> Tuple[int, int]:
+        lv = store.levels[level - 1]
+        state = (int(lv.entries), int(lv.num_runs))
+        if self._state.get(level) != state:     # the level moved: re-arm
+            self._state[level] = state
+            self._tried[level] = set()
+        tried = self._tried.setdefault(level, set())
+        cands = self._candidates(lo_key, hi_key, width)
+        fresh = [c for c in cands if c[0] not in tried]
+        if not fresh:       # full cycle without movement: start over
+            tried.clear()
+            fresh = cands
+        _, clo, chi = min((self._overlap_score(store, level, clo, chi),
+                           clo, chi) for clo, chi in fresh)
+        tried.add(clo)
+        return clo, chi
 
     def plan_maintenance(self, store, stats, clock: int) -> List[MergePlan]:
         run_counts = [lv.num_runs for lv in store.levels]
@@ -232,11 +303,15 @@ class PartialCompactionPlanner(CompactionPolicy):
             lo_key = int(lv.min_keys.min())
             hi_key = int(lv.max_keys.max())
             width = max(1, (hi_key - lo_key + 1) // self.parts)
-            cur = self._cursors.get(level, lo_key)
-            if cur < lo_key or cur > hi_key:
-                cur = lo_key
-            key_hi = hi_key + 1 if cur + width > hi_key else cur + width
-            self._cursors[level] = key_hi
+            if self.select == "overlap":
+                cur, key_hi = self._pick_overlap(store, level, lo_key,
+                                                 hi_key, width)
+            else:
+                cur = self._cursors.get(level, lo_key)
+                if cur < lo_key or cur > hi_key:
+                    cur = lo_key
+                key_hi = hi_key + 1 if cur + width > hi_key else cur + width
+                self._cursors[level] = key_hi
             return [MergePlan(kind="partial", level=level,
                               run_ids=tuple(range(lv.num_runs)),
                               target_level=level + 1,

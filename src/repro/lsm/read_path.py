@@ -15,10 +15,13 @@ Three implementations behind :func:`point_read_level`:
   module must stay jax-free unless an opt-in mode is selected.
 * ``jnp`` — the dense jax reference (``repro.kernels.point_read.ref``),
   lazily imported; exact splitmix64 under ``jax.experimental.enable_x64``.
+* ``jnp_limb`` — the same reference with the Bloom hash on uint32 limbs
+  (``repro.kernels.point_read.limb``): the TPU-portable arithmetic tier,
+  bit-identical to the native uint64 hash.
 * ``pallas`` — the fused kernel (``repro.kernels.point_read.kernel``),
   one VMEM pass per key tile per level; interpret mode off-TPU.
 
-All three return bit-identical results and counters (tested), so the
+All modes return bit-identical results and counters (tested), so the
 mode is a pure execution choice — golden ``IOStats`` are preserved.
 The switch is process-global (``set_read_kernel`` / ``read_kernel``)
 rather than an ``EngineConfig`` field: engine configs stay hashable,
@@ -32,7 +35,7 @@ from typing import Tuple
 
 import numpy as np
 
-VALID_MODES = ("numpy", "jnp", "pallas")
+VALID_MODES = ("numpy", "jnp", "jnp_limb", "pallas")
 
 _MODE = "numpy"
 

@@ -28,7 +28,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from .engine import IOStats, LSMTree
+from .engine import IOStats, LSMTree, TOMBSTONE
 from .store import TOMB
 
 
@@ -67,10 +67,22 @@ class SessionPlan:
     range_los: np.ndarray      # uint64, one per kind-2 query
     range_his: np.ndarray
     write_keys: np.ndarray     # uint64, one per kind-3 query
+    #: optional per-write delete mask: True marks a write that is a
+    #: tombstone for an existing key (tombstone-churn scenarios); None
+    #: means every write is a fresh insert (the classic sessions).
+    write_tombs: Optional[np.ndarray] = None
 
     @property
     def n_queries(self) -> int:
         return len(self.kinds)
+
+    @property
+    def insert_keys(self) -> np.ndarray:
+        """Fresh-key inserts only (delete targets excluded) — the keys a
+        caller appends to its live-key population after the session."""
+        if self.write_tombs is None:
+            return self.write_keys
+        return self.write_keys[~self.write_tombs]
 
 
 def draw_keys(n: int, seed: int = 7, key_space: int = 2 ** 48) -> np.ndarray:
@@ -102,7 +114,9 @@ def materialize_session(existing_keys: np.ndarray, w: np.ndarray,
                         n_queries: int = 2000, seed: int = 0,
                         key_space: int = 2 ** 48,
                         range_fraction: float = 2e-5,
-                        zipf_a: Optional[float] = None) -> SessionPlan:
+                        zipf_a: Optional[float] = None,
+                        hot_offset: int = 0,
+                        delete_fraction: float = 0.0) -> SessionPlan:
     """Draw every query of a session up front.
 
     The rng call sequence is exactly that of per-query execution (kinds,
@@ -111,7 +125,15 @@ def materialize_session(existing_keys: np.ndarray, w: np.ndarray,
     executed for the same seed.  Non-empty reads sample keys known to exist
     (optionally Zipfian-ranked, Section 9.3 "Workload Skew"); empty reads
     sample the same domain but miss; range queries use a small span; writes
-    insert fresh keys."""
+    insert fresh keys.
+
+    Scenario shaping (:mod:`repro.scenarios`) extends the draw without
+    perturbing it for default parameters: ``hot_offset`` rotates the
+    rank->key mapping of non-empty reads (hot-set migration — a post-draw
+    modular shift, so the rng sequence is untouched), and
+    ``delete_fraction`` retargets that fraction of the session's writes as
+    tombstones for the *oldest* live keys, drawn after the main loop so
+    every classic draw is unchanged."""
     rng = np.random.default_rng(seed)
     w = np.asarray(w, np.float64)
     w = w / w.sum()
@@ -132,28 +154,46 @@ def materialize_session(existing_keys: np.ndarray, w: np.ndarray,
                 idx = min(len(existing) - 1, rng.zipf(zipf_a) - 1)
             else:
                 idx = int(rng.integers(0, len(existing)))
+            if hot_offset:
+                idx = (idx + int(hot_offset)) % len(existing)
             point_keys.append(int(existing[idx]))
         elif kind == 2:      # short range query
             lo = int(rng.integers(0, key_space - span))
             range_los.append(lo)
             range_his.append(lo + span)
+    write_keys = fresh[:n_writes]
+    write_tombs = None
+    if delete_fraction > 0.0 and n_writes and len(existing):
+        pool = max(1, len(existing) // 2)    # the oldest half of the keys
+        n_del = min(int(round(delete_fraction * n_writes)), n_writes, pool)
+        if n_del > 0:
+            slots = np.sort(rng.choice(n_writes, size=n_del, replace=False))
+            targets = np.sort(rng.choice(pool, size=n_del, replace=False))
+            write_keys = write_keys.copy()
+            write_keys[slots] = existing[targets]
+            write_tombs = np.zeros(n_writes, bool)
+            write_tombs[slots] = True
     return SessionPlan(workload=w, kinds=kinds,
                        point_keys=np.asarray(point_keys, np.uint64),
                        range_los=np.asarray(range_los, np.uint64),
                        range_his=np.asarray(range_his, np.uint64),
-                       write_keys=fresh[:n_writes])
+                       write_keys=write_keys,
+                       write_tombs=write_tombs)
 
 
 def _resolve_against_pending(tree: LSMTree, read_keys: np.ndarray,
                              read_pos: np.ndarray, write_keys: np.ndarray,
-                             write_pos: np.ndarray, write_enc: int):
+                             write_pos: np.ndarray, write_encs):
     """Per-read resolution against the evolving write buffer of a window.
 
     A read at stream position p sees the buffer as it was at window start
     (the tree's live buffer) plus every window write at a position < p,
     newest wins.  Key collisions between reads and pending writes are rare
     (writes are fresh draws), so the per-collision position check is a tiny
-    fallback loop under vectorized candidate detection."""
+    fallback loop under vectorized candidate detection.  ``write_encs`` is
+    the per-write encoded value (a scalar broadcasts) — tombstone-churn
+    sessions pass ``TOMB`` entries so a read after a pending delete
+    resolves to not-found."""
     n = len(read_keys)
     resolved = np.zeros(n, bool)
     found = np.zeros(n, bool)
@@ -166,16 +206,21 @@ def _resolve_against_pending(tree: LSMTree, read_keys: np.ndarray,
             found[hit] = henc != TOMB
             enc[hit] = henc
     if len(write_keys):
+        wenc = np.broadcast_to(np.asarray(write_encs, np.int64),
+                               write_keys.shape)
         order = np.argsort(write_keys, kind="stable")  # pos ascending in ties
         wks = write_keys[order]
         wps = write_pos[order]
+        wes = wenc[order]
         lo = np.searchsorted(wks, read_keys, side="left")
         hi = np.searchsorted(wks, read_keys, side="right")
         for i in np.flatnonzero(hi > lo):
-            if np.searchsorted(wps[lo[i]:hi[i]], read_pos[i]) > 0:
-                resolved[i] = True     # a write before this read wins
-                found[i] = True
-                enc[i] = write_enc
+            j = int(np.searchsorted(wps[lo[i]:hi[i]], read_pos[i]))
+            if j > 0:
+                e = int(wes[lo[i] + j - 1])    # latest write before the read
+                resolved[i] = True
+                found[i] = e != TOMB
+                enc[i] = e
     return resolved, found, enc
 
 
@@ -201,6 +246,10 @@ def execute_session(tree: LSMTree, plan: SessionPlan,
     wr_pos = pos[kinds == 3]
     cap = tree.cfg.buf_entries
     write_enc = tree.store.codec.encode(1)    # sessions write value 1
+    tombs = plan.write_tombs
+    write_encs_all = None
+    if tombs is not None:
+        write_encs_all = np.where(tombs, TOMB, write_enc).astype(np.int64)
     pi = qi = wi = 0
     n_wr = len(wr_pos)
     win_start = 0
@@ -237,9 +286,11 @@ def execute_session(tree: LSMTree, plan: SessionPlan,
         pt_hi = int(np.searchsorted(pt_pos, win_end))
         if pt_hi > pi:
             rk = plan.point_keys[pi:pt_hi]
+            pend_enc = write_enc if write_encs_all is None \
+                else write_encs_all[wi:wi + m]
             resolved, found, enc = _resolve_against_pending(
                 tree, rk, pt_pos[pi:pt_hi], plan.write_keys[wi:wi + m],
-                wr_pos[wi:wi + m], write_enc)
+                wr_pos[wi:wi + m], pend_enc)
             tree.classify_point_batch(rk, resolved=resolved, found=found,
                                       enc=enc, use_buffer=False)
             pi = pt_hi
@@ -250,7 +301,16 @@ def execute_session(tree: LSMTree, plan: SessionPlan,
             qi = rq_hi
         # -- the window's writes (put_batch flushes at the boundary) --------
         if m:
-            tree.put_batch(plan.write_keys[wi:wi + m], np.ones(m, np.int64))
+            tslice = tombs[wi:wi + m] if tombs is not None else None
+            if tslice is not None and tslice.any():
+                vals = np.empty(m, object)
+                vals[:] = 1
+                for j in np.flatnonzero(tslice):
+                    vals[j] = TOMBSTONE
+                tree.put_batch(plan.write_keys[wi:wi + m], vals)
+            else:   # int fast path: classic sessions are bit-unchanged
+                tree.put_batch(plan.write_keys[wi:wi + m],
+                               np.ones(m, np.int64))
             wi += m
     delta = tree.stats.minus(before)
     reads_io = delta.random_reads + f_seq * delta.seq_reads

@@ -352,16 +352,24 @@ def execute_memory_fleet(plan) -> Tuple[Dict[Tuple[int, str],
     arb_tunings = list(tunings)
 
     # -- the segment loop --------------------------------------------------
+    scenario = getattr(plan, "scenario", None)   # trace-shaped kinds only:
+    # the spec rejects the adversary on the memory axis (no defender arm)
     for s in range(S):
         for f in range(F):
             mix = plan.schedules[f][s]
+            nq = d.n_queries
+            extra = {}
+            if scenario is not None:
+                nq = int(scenario.segment_queries(s))
+                extra = dict(scenario.session_kwargs(s, len(keys[f])))
+            rf = float(extra.pop("range_fraction", d.range_fraction))
             splan = materialize_session(
-                keys[f], mix, n_queries=d.n_queries,
+                keys[f], mix, n_queries=nq,
                 seed=d.session_seed + f * S + s, key_space=d.key_space,
-                range_fraction=d.range_fraction)
+                range_fraction=rf, **extra)
             for arm in MEMORY_ARMS:
                 sessions[(f, arm)].execute_segment(splan, mix, s)
-            keys[f] = np.concatenate([keys[f], splan.write_keys])
+            keys[f] = np.concatenate([keys[f], splan.insert_keys])
         if m.enabled and s < S - 1:    # a re-division after the last
             arbiter.step(arb_sessions, arb_tunings, segment=s)
 

@@ -21,7 +21,18 @@ is defined in):
 ``min_windows`` gates both (no re-tuning off a cold estimator) and
 ``cooldown`` enforces a minimum number of segments between re-tunes
 (hysteresis: a re-tune moves the expected mix to the estimate, so a noisy
-estimator cannot thrash the solver)."""
+estimator cannot thrash the solver).
+
+A third, optional trigger lives in *sequence* space rather than KL space:
+:class:`PageHinkleyDetector` (Page 1954; Hinkley 1971 — the CUSUM family)
+watches the per-segment KL observations as a time series and alarms on a
+sustained upward shift of their mean.  Where the KL threshold compares a
+*windowed estimate* to a fixed bar — so a short burst is diluted by the
+estimator's memory — Page-Hinkley accumulates deviation-above-mean and
+alarms when the cumulative excursion since its running minimum exceeds
+``lambda``, catching changes whose per-window magnitude never clears the
+threshold.  Select it per-experiment with ``DriftSpec.detector =
+"page_hinkley"``."""
 
 from __future__ import annotations
 
@@ -29,6 +40,39 @@ import dataclasses
 from typing import List, Optional, Sequence
 
 import numpy as np
+
+
+class PageHinkleyDetector:
+    """Page-Hinkley change-point test over a scalar observation stream.
+
+    Maintains the running mean ``x_bar_t`` and the cumulative statistic
+    ``m_t = sum_{i<=t} (x_i - x_bar_i - delta)``; alarms when
+    ``m_t - min_{i<=t} m_i > lambda`` — i.e. the observations have run
+    ``delta``-above their own mean long enough to climb ``lambda`` from the
+    deepest trough.  ``delta`` sets the magnitude considered "no change"
+    (noise floor), ``lambda`` the evidence required.  Stateful: callers
+    (:class:`repro.online.session.OnlineSession`) feed one observation per
+    segment and :meth:`reset` after acting on an alarm."""
+
+    def __init__(self, delta: float = 0.005, lam: float = 0.25):
+        self.delta = float(delta)
+        self.lam = float(lam)
+        self.reset()
+
+    def reset(self) -> None:
+        self.n = 0
+        self.mean = 0.0
+        self.m = 0.0
+        self.m_min = 0.0
+
+    def update(self, x: float) -> bool:
+        """Feed one observation; True when the test alarms."""
+        x = float(x)
+        self.n += 1
+        self.mean += (x - self.mean) / self.n
+        self.m += x - self.mean - self.delta
+        self.m_min = min(self.m_min, self.m)
+        return self.m - self.m_min > self.lam
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,17 +84,37 @@ class DriftPolicy:
     #: floor for re-derived rho budgets (a steady post-drift history still
     #: keeps a hedge; also keeps the re-tune on the robust solver path)
     rho_floor: float = 0.05
+    #: which change signal arms the trigger: "kl" (threshold + budget, the
+    #: default) or "page_hinkley" (adds the sequential CUSUM-family test on
+    #: the per-segment KL stream; both KL triggers stay active)
+    detector: str = "kl"
+    ph_delta: float = 0.005
+    ph_lambda: float = 0.25
+
+    def make_detector(self) -> Optional[PageHinkleyDetector]:
+        """The stateful sequential detector this policy asks for, or None.
+        The policy itself is frozen; the owner (one per deployment) holds
+        the detector and feeds it the per-segment KL observations."""
+        if self.detector == "page_hinkley":
+            return PageHinkleyDetector(delta=self.ph_delta,
+                                       lam=self.ph_lambda)
+        return None
 
     def decide(self, kl_obs: float, rho_live: float, n_windows: int,
-               since_retune: int) -> Optional[str]:
+               since_retune: int,
+               change_point: bool = False) -> Optional[str]:
         """The trigger: a reason string when a re-tune should fire, else
-        None.  ``since_retune`` counts segments since the last swap."""
+        None.  ``since_retune`` counts segments since the last swap;
+        ``change_point`` is the sequential detector's alarm for this
+        segment (False when the policy runs KL-only)."""
         if n_windows < self.min_windows or since_retune < self.cooldown:
             return None
         if rho_live > 0.0 and kl_obs > self.budget_slack * rho_live:
             return "budget_exhausted"
         if kl_obs > self.kl_threshold:
             return "kl_threshold"
+        if change_point:
+            return "change_point"
         return None
 
 

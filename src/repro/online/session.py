@@ -89,7 +89,8 @@ class OnlineSession:
 
     def __init__(self, tree, expected, rho: float, sys, mode: str = "online",
                  policy: Optional[DriftPolicy] = None, estimator=None,
-                 capacity: int = 128, f_a: float = 1.0, f_seq: float = 1.0):
+                 capacity: int = 128, f_a: float = 1.0, f_seq: float = 1.0,
+                 phi=None):
         if mode not in self.MODES:
             raise ValueError(f"mode {mode!r} not in {self.MODES}")
         self.tree = tree
@@ -97,8 +98,15 @@ class OnlineSession:
         self.mode = mode
         self.expected = np.asarray(expected, np.float64)
         self.rho = float(rho)
+        #: the deployed tuning's design point — what an adversary scenario
+        #: reads to cost its attack; kept current across :meth:`apply`.
+        self.phi = phi
         self.policy = policy or DriftPolicy()
         self.estimator = estimator or make_estimator("window")
+        #: the policy's optional sequential change-point test; the policy
+        #: object is frozen and fleet-shared, so the per-deployment state
+        #: (running mean, cumulative statistic) lives here
+        self.detector = self.policy.make_detector()
         self.history = WindowHistory(capacity)
         self.records: List[SegmentRecord] = []
         self._since_retune = 10 ** 9
@@ -126,9 +134,12 @@ class OnlineSession:
         self._swap_reason = None
         self.records.append(rec)
         self._since_retune += 1
+        change_point = (self.detector.update(kl)
+                        if self.detector is not None else False)
         if self.mode == "online":
             reason = self.policy.decide(kl, self.rho, len(self.history),
-                                        self._since_retune)
+                                        self._since_retune,
+                                        change_point=change_point)
             if reason is not None:
                 # re-center on the estimate; budget = measured spread of the
                 # history around it (Algorithm 1, floored)
@@ -152,26 +163,42 @@ class OnlineSession:
         if sys is not None:
             self.sys = sys
         self.tree.retune(tuning.phi, self.sys)
+        self.phi = tuning.phi
         self.expected = np.asarray(w_center, np.float64)
         self.rho = float(rho)
         self._since_retune = 0
         self._swap_reason = reason
+        if self.detector is not None:
+            self.detector.reset()    # the change was acted on; re-arm
 
 
-def execute_drift(plan) -> Dict[Tuple[int, str], DriftArmResult]:
+def execute_drift(plan):
     """Run a compiled drift experiment (:class:`repro.api.compile
-    .DriftPlan`); returns ``{(workload index, arm): DriftArmResult}``.
+    .DriftPlan`); returns ``(results, regret)`` where ``results`` is
+    ``{(workload index, arm): DriftArmResult}`` and ``regret`` is
+    ``{workload index: [per-segment regret record, ...]}`` — non-empty only
+    under an adversary scenario, where each record carries the attacked
+    mix, the model costs, and the KL dual bound it must stay under.
 
     Inherently sequential across segments (the loop is a feedback system),
     so every execution backend runs this same inline driver; within a
-    segment boundary all fired re-tunes are one storm."""
+    segment boundary all fired re-tunes are one storm.  Scenario kinds
+    (:mod:`repro.scenarios`) hook in at three points: the compiled schedule
+    (already lowered by :func:`repro.api.compile.drift_schedule`), the
+    per-segment session shaping (query volume, skew/rotation, deletes,
+    scan width), and — for the adversary — the per-segment mix itself,
+    re-solved inside the defender's live rho-ball."""
     from repro.lsm import LSMTree, draw_keys, materialize_session, populate
     d = plan.drift
     S = int(d.segments)
+    scenario = getattr(plan, "scenario", None)
+    adversary = scenario if scenario is not None and scenario.is_adversary \
+        else None
     policy = DriftPolicy(kl_threshold=d.kl_threshold,
                          budget_slack=d.budget_slack,
                          min_windows=d.min_windows, cooldown=d.cooldown,
-                         rho_floor=d.rho_floor)
+                         rho_floor=d.rho_floor, detector=d.detector,
+                         ph_delta=d.ph_delta, ph_lambda=d.ph_lambda)
     retune_kw = dict(design=getattr(plan, "design", None),
                      n_starts=d.retune_starts, steps=d.retune_steps,
                      seed=d.retune_seed)
@@ -208,12 +235,13 @@ def execute_drift(plan) -> Dict[Tuple[int, str], DriftArmResult]:
             else plan.expected[a.widx]
         sessions[(a.widx, a.arm)] = OnlineSession(
             tree, expected=expected, rho=a.rho, sys=plan.sys, mode=mode,
-            policy=policy,
+            policy=policy, phi=tuning.phi,
             estimator=make_estimator(d.estimator, alpha=d.alpha,
                                      window=d.window),
             capacity=d.capacity, f_a=d.f_a, f_seq=d.f_seq)
 
     # -- the segment loop ---------------------------------------------------
+    regret: Dict[int, List[dict]] = {w: [] for w in keys}
     for s in range(S):
         if s > 0:
             for a in oracle_arms:
@@ -223,14 +251,38 @@ def execute_drift(plan) -> Dict[Tuple[int, str], DriftArmResult]:
                     reason="oracle")
         for widx in sorted(keys):
             mix = plan.schedules[widx][s]
+            rec = None
+            if adversary is not None:
+                # attack the preferred deployed arm's live state; every arm
+                # then executes the attacked mix (the comparison stays
+                # paired — same keys, same session plan)
+                from repro.scenarios.adversary import DEFENDER_ORDER
+                defender_arm = next(arm for arm in DEFENDER_ORDER
+                                    if (widx, arm) in sessions)
+                defender = sessions[(widx, defender_arm)]
+                mix, rec = adversary.attack(defender.phi, defender.expected,
+                                            defender.rho, plan.sys)
+            nq = d.n_queries
+            extra = {}
+            if scenario is not None:
+                nq = int(scenario.segment_queries(s))
+                extra = dict(scenario.session_kwargs(s, len(keys[widx])))
+            rf = float(extra.pop("range_fraction", d.range_fraction))
             splan = materialize_session(
-                keys[widx], mix, n_queries=d.n_queries,
+                keys[widx], mix, n_queries=nq,
                 seed=d.session_seed + widx * S + s, key_space=d.key_space,
-                range_fraction=d.range_fraction)
+                range_fraction=rf, **extra)
             for a in plan.arms:
                 if a.widx == widx:
                     sessions[(widx, a.arm)].execute_segment(splan, mix, s)
-            keys[widx] = np.concatenate([keys[widx], splan.write_keys])
+            if rec is not None:
+                rec["segment"] = s
+                rec["widx"] = widx
+                rec["defender"] = defender_arm
+                rec["measured_io"] = float(
+                    defender.records[-1].avg_io_per_query)
+                regret[widx].append(rec)
+            keys[widx] = np.concatenate([keys[widx], splan.insert_keys])
         fired = [(key, req) for key, sess in sessions.items()
                  for req in [sess.take_request()] if req is not None]
         if fired and s < S - 1:        # a swap after the last segment is moot
@@ -240,6 +292,7 @@ def execute_drift(plan) -> Dict[Tuple[int, str], DriftArmResult]:
                 sessions[key].apply(tr, w_center=req.w, rho=req.rho,
                                     reason=req.reason)
 
-    return {key: DriftArmResult(widx=key[0], arm=key[1],
-                                records=sess.records)
-            for key, sess in sessions.items()}
+    results = {key: DriftArmResult(widx=key[0], arm=key[1],
+                                   records=sess.records)
+               for key, sess in sessions.items()}
+    return results, {w: r for w, r in regret.items() if r}
