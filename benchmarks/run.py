@@ -104,6 +104,16 @@ CHECK_METRICS = {
         "scenarios_summary.claim_robust_ge_stale": "higher",
         "scenarios_summary.claim_regret_le_dual_bound": "higher",
     },
+    "obs": {
+        "obs_fleet.engine_s": "lower",
+        # enabled-vs-disabled telemetry tax on the same fleet (<= 1.05
+        # gated in the suite itself; the baseline watches for creep)
+        "obs_overhead.overhead_ratio": "lower",
+        # bools: tracing never perturbs engine results; the measured-IO
+        # calibration fit is at least as close as the hand constants
+        "obs_identity.claim_bit_identical": "higher",
+        "obs_calibration.claim_fit_ge_hand": "higher",
+    },
 }
 
 #: --check exit codes: regression vs misconfiguration (missing baseline /
@@ -132,6 +142,7 @@ SUITE_MODULES = [
     ("faults", "bench_faults"),
     ("memory", "bench_memory_fleet"),
     ("scenarios", "bench_scenarios"),
+    ("obs", "bench_obs"),
 ]
 
 
@@ -284,6 +295,17 @@ def _run_spec(args) -> None:
         print(f"# WARNING unrecovered cell {cell} arm {pol!r}: "
               + (err.splitlines()[-1][:200] if err else "?"), flush=True)
     print(f"# {spec.name} done in {report.wall_time_s:.1f}s", flush=True)
+    if args.trace:
+        from repro import obs
+        from repro.faults import atomic_write_json
+        from repro.obs.trace import write_trace
+        n = write_trace(os.path.join(args.trace,
+                                     f"trace_{spec.name}.json"))
+        atomic_write_json(os.path.join(args.trace,
+                                       f"metrics_{spec.name}.json"),
+                          _jsonable(obs.metrics_snapshot()))
+        print(f"# trace {spec.name}: {n} events -> "
+              f"{args.trace}/trace_{spec.name}.json", flush=True)
     if args.json:
         os.makedirs(args.json, exist_ok=True)
         path = os.path.join(args.json, f"BENCH_{spec.name}.json")
@@ -309,6 +331,12 @@ def main() -> None:
     parser.add_argument("--spec", metavar="FILE.json", default=None,
                         help="run one declarative repro.api.ExperimentSpec "
                              "and emit its report (honors --json)")
+    parser.add_argument("--trace", metavar="DIR", default=None,
+                        help="enable structured telemetry (repro.obs) and "
+                             "write per-suite trace_<suite>.json (Chrome/"
+                             "Perfetto) + metrics_<suite>.json into DIR; "
+                             "off by default and guaranteed not to change "
+                             "any measured result")
     parser.add_argument("--run-dir", metavar="DIR", default=None,
                         help="with --spec: persist per-shard results into "
                              "DIR (atomic, checksummed) as they complete")
@@ -335,7 +363,19 @@ def main() -> None:
         width = max(len(key) for key, _ in SUITE_MODULES)
         for key, name in SUITE_MODULES:
             print(f"{key:<{width}}  {_suite_description(name)}".rstrip())
+        print()
+        print("# --trace DIR: any suite above also emits trace_<suite>.json"
+              " (open in Perfetto / chrome://tracing) and"
+              " metrics_<suite>.json; see docs/observability.md")
         return
+    if args.trace:
+        # One switch flips the whole stack: the instrumented seams all go
+        # through the repro.obs process-global, and bench modules that
+        # emit artifacts (bench_obs's calibration) look for REPRO_OBS_OUT.
+        os.makedirs(args.trace, exist_ok=True)
+        os.environ["REPRO_OBS_OUT"] = args.trace
+        from repro import obs
+        obs.configure(enabled=True, clock="wall")
     if args.resume and not args.run_dir:
         parser.error("--resume requires --run-dir (the directory holding "
                      "the persisted shard results)")
@@ -379,6 +419,9 @@ def main() -> None:
     all_misconfigured = []
     missing_baselines = []
     for key, mod in selected:
+        if args.trace:
+            from repro import obs
+            obs.clear()  # per-suite trace files, not one giant ring
         t0 = time.time()
         rows, error = [], None
         try:
@@ -392,6 +435,16 @@ def main() -> None:
             traceback.print_exc()
         wall = time.time() - t0
         print(f"# {key} done in {wall:.1f}s", flush=True)
+        if args.trace:
+            from repro import obs
+            from repro.faults import atomic_write_json
+            from repro.obs.trace import write_trace
+            n = write_trace(os.path.join(args.trace, f"trace_{key}.json"))
+            atomic_write_json(os.path.join(args.trace,
+                                           f"metrics_{key}.json"),
+                              _jsonable(obs.metrics_snapshot()))
+            print(f"# trace {key}: {n} events -> "
+                  f"{args.trace}/trace_{key}.json", flush=True)
         if args.json:
             from repro.faults import atomic_write_json
             payload = {

@@ -43,6 +43,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+
 from .compile import TreeBuild, TrialPlan, TuningPlan
 from .report import Cell, Report, TreeProbe
 
@@ -88,38 +90,45 @@ def execute_trial(plan: TrialPlan, trees: Optional[List[TreeBuild]] = None):
     keys_by_group: Dict[int, np.ndarray] = {}
     dead_by_group: Dict[int, np.ndarray] = {}
     engine_trees, keys_list, seed_rows = [], [], []
-    for b in builds:
-        keys = keys_by_group.get(b.key_group)
-        if keys is None:
-            keys = draw_keys(plan.n_keys, seed=b.key_seed,
-                             key_space=plan.key_space)
-            keys_by_group[b.key_group] = keys
+    with obs.span("trial.populate", trees=len(builds)):
+        for b in builds:
+            keys = keys_by_group.get(b.key_group)
+            if keys is None:
+                keys = draw_keys(plan.n_keys, seed=b.key_seed,
+                                 key_space=plan.key_space)
+                keys_by_group[b.key_group] = keys
+                if plan.delete_fraction > 0:
+                    dead_by_group[b.key_group] = \
+                        keys[::int(1 / plan.delete_fraction)]
+            tree = LSMTree.from_phi(_PhiLite(b.T, b.mfilt_bits, b.K),
+                                    sys_lite,
+                                    expected_entries=plan.n_keys,
+                                    entry_bytes=plan.entry_bytes,
+                                    policy=b.policy,
+                                    policy_params=b.policy_params)
+            tree.obs_label = f"w{b.cell[0]}.rho{b.cell[1]}/{b.policy}"
+            populate(tree, plan.n_keys, key_space=plan.key_space, keys=keys)
             if plan.delete_fraction > 0:
-                dead_by_group[b.key_group] = \
-                    keys[::int(1 / plan.delete_fraction)]
-        tree = LSMTree.from_phi(_PhiLite(b.T, b.mfilt_bits, b.K), sys_lite,
-                                expected_entries=plan.n_keys,
-                                entry_bytes=plan.entry_bytes,
-                                policy=b.policy,
-                                policy_params=b.policy_params)
-        populate(tree, plan.n_keys, key_space=plan.key_space, keys=keys)
-        if plan.delete_fraction > 0:
-            for k in dead_by_group[b.key_group]:  # seed tombstones
-                tree.delete(int(k))
-            tree.flush()
-            tree.stats = IOStats()      # deletes are setup, not workload
-        engine_trees.append(tree)
-        keys_list.append(keys)
-        seed_rows.append(list(b.session_seeds))
+                for k in dead_by_group[b.key_group]:  # seed tombstones
+                    tree.delete(int(k))
+                tree.flush()
+                tree.stats = IOStats()    # deletes are setup, not workload
+            engine_trees.append(tree)
+            keys_list.append(keys)
+            seed_rows.append(list(b.session_seeds))
     populate_s = time.time() - t0
 
     t0 = time.time()
-    results = run_fleet(engine_trees, np.asarray(plan.sessions, np.float64),
-                        keys_list, n_queries=plan.n_queries,
-                        seeds=np.asarray(seed_rows),
-                        key_space=plan.key_space,
-                        range_fraction=plan.range_fraction,
-                        f_a=plan.f_a, f_seq=plan.f_seq, zipf_a=plan.zipf_a)
+    with obs.span("trial.fleet", trees=len(builds),
+                  sessions=len(plan.sessions)):
+        results = run_fleet(engine_trees,
+                            np.asarray(plan.sessions, np.float64),
+                            keys_list, n_queries=plan.n_queries,
+                            seeds=np.asarray(seed_rows),
+                            key_space=plan.key_space,
+                            range_fraction=plan.range_fraction,
+                            f_a=plan.f_a, f_seq=plan.f_seq,
+                            zipf_a=plan.zipf_a)
     fleet_s = time.time() - t0
     probes = [TreeProbe.from_tree(
         t, dead_by_group.get(b.key_group, np.empty(0))[:plan.probe_dead_keys]
@@ -437,6 +446,11 @@ class SubprocessBackend(InlineBackend):
         import pickle
         import subprocess
         fault = faults.worker_fault(sid, attempt) if faults else None
+        if fault is not None and obs.enabled():
+            # cross-reference: this attempt's outcome event carries the
+            # same (shard, attempt) key as the injection that shaped it
+            obs.event("shard.fault_injected", shard=sid, attempt=attempt,
+                      fault=getattr(fault, "kind", None) or str(fault))
         job = pickle.dumps((plan, [plan.trees[t] for t in shard], fault),
                            protocol=pickle.HIGHEST_PROTOCOL)
         try:
@@ -550,22 +564,49 @@ class SubprocessBackend(InlineBackend):
 
         stats = {"attempts": 0, "persist_failures": 0, "shards_run": 0}
         walls = {"populate_s": 0.0, "fleet_s": 0.0}
+        # Every attempt — including the ones a later success used to mask —
+        # is recorded here and surfaced in the Report: a silently-flapping
+        # shard (fails, backs off, then succeeds) used to be invisible
+        # because only failure stderr was kept.  list.append is atomic, so
+        # the pool threads share this without a lock.
+        attempt_log: List[dict] = []
 
         def run_with_retries(job):
             """(sid, shard) -> (sid, shard, out-or-None, [errors]).
             Bounded retries with seeded backoff; persists on success so a
-            killed driver keeps every completed shard."""
+            killed driver keeps every completed shard.  Per-attempt
+            latencies and outcomes land in ``attempt_log`` either way."""
             sid, shard = job
             errors: List[str] = []
             for attempt in range(self.retry.attempts()):
                 if attempt:
                     time.sleep(self.retry.delay(sid, attempt))
+                a_t0 = time.perf_counter()
                 try:
                     out = self._launch(cmd, env, plan, shard, sid, attempt,
                                        faults)
                 except ShardFailure as exc:
+                    latency = time.perf_counter() - a_t0
+                    attempt_log.append({"shard": sid, "attempt": attempt,
+                                        "ok": False,
+                                        "latency_s": round(latency, 6)})
+                    obs.count("shard.attempts")
+                    obs.count("shard.failed_attempts")
+                    if obs.enabled():
+                        obs.event("shard.attempt", shard=sid,
+                                  attempt=attempt, ok=False,
+                                  latency_s=round(latency, 6),
+                                  error=str(exc)[:200])
                     errors.append(str(exc))
                     continue
+                latency = time.perf_counter() - a_t0
+                attempt_log.append({"shard": sid, "attempt": attempt,
+                                    "ok": True,
+                                    "latency_s": round(latency, 6)})
+                obs.count("shard.attempts")
+                if obs.enabled():
+                    obs.event("shard.attempt", shard=sid, attempt=attempt,
+                              ok=True, latency_s=round(latency, 6))
                 stats["persist_failures"] += \
                     self._persist(digest, shard, out, faults)
                 return sid, shard, out, errors
@@ -609,6 +650,10 @@ class SubprocessBackend(InlineBackend):
             last_err = dict(lost)
             regrouped = sup.reassign([t for t, _ in lost], self.workers)
             report.walls["reshard_trees"] = len(last_err)
+            obs.count("shard.reshards")
+            if obs.enabled():
+                obs.event("shard.reshard", trees=len(last_err),
+                          new_shards=len(regrouped))
             next_sid = len(shards)
             lost = run_round([(next_sid + j, s)
                               for j, s in enumerate(regrouped)])
@@ -630,6 +675,14 @@ class SubprocessBackend(InlineBackend):
         report.walls["failed_trees"] = len(report.failed_cells)
         if stats["persist_failures"]:
             report.walls["persist_failures"] = stats["persist_failures"]
+        # per-attempt accounting (sorted: pool threads interleave appends):
+        # total attempts, flapping shards (>= 1 failed attempt before a
+        # success), and the latency spread — Report.rows renders these, so
+        # a flapping fleet is visible without digging through stderr
+        report.shard_attempts = sorted(
+            attempt_log, key=lambda a: (a["shard"], a["attempt"]))
+        report.walls["shard_attempt_count"] = len(attempt_log)
+        obs.count("shard.resumed", report.walls["resumed_trees"])
 
 
 class RemoteBackend(ExecutionBackend):

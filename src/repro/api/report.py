@@ -180,6 +180,11 @@ class Report:
     #: holes instead of crashing (``docs/faults.md``).
     failed_cells: Dict[Tuple[Cell, str], str] = dataclasses.field(
         default_factory=dict)
+    #: SubprocessBackend per-attempt log: one dict per worker launch
+    #: ({"shard", "attempt", "ok", "latency_s"}), successes included — a
+    #: shard that flapped (failed, then succeeded on retry) is visible
+    #: here even though the sweep reported no failure.
+    shard_attempts: List[dict] = dataclasses.field(default_factory=list)
     walls: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     # -- accessors ----------------------------------------------------------
@@ -330,6 +335,21 @@ class Report:
                         for _, err in sorted(self.failed_cells.items(),
                                              key=lambda kv: str(kv[0]))],
             ))
+        if self.shard_attempts:
+            lat = [a["latency_s"] for a in self.shard_attempts]
+            failed = {a["shard"] for a in self.shard_attempts if not a["ok"]}
+            flapping = sorted(
+                failed & {a["shard"] for a in self.shard_attempts
+                          if a["ok"]})
+            out.append(Row(
+                f"{name}_shards", 0.0,
+                attempts=len(self.shard_attempts),
+                failed_attempts=sum(not a["ok"]
+                                    for a in self.shard_attempts),
+                flapping_shards=flapping,
+                max_attempt_latency=round(max(lat), 4),
+                mean_attempt_latency=round(sum(lat) / len(lat), 4),
+            ))
         out.append(Row(f"{name}_walls", self.wall_time_s * 1e6,
                        **{k: round(v, 3) for k, v in self.walls.items()},
                        cells=len(self.cells),
@@ -341,16 +361,22 @@ class Report:
                          error: Optional[str] = None) -> Dict[str, Any]:
         """Exactly the ``BENCH_<suite>.json`` schema ``run.py`` emits and
         ``--check`` diffs (suite / wall_time_s / error / rows / checksum)."""
+        from repro import obs
         from repro.faults import stamp_checksum
         rows = self.rows() if rows is None else rows
-        return stamp_checksum({
+        payload: Dict[str, Any] = {
             "suite": self.spec.name,
             "wall_time_s": round(self.wall_time_s, 3),
             "error": error,
             "rows": [{"name": r.name,
                       "us_per_call": jsonable(round(float(r.us), 1)),
                       "derived": jsonable(r.derived)} for r in rows],
-        })
+        }
+        # Only when telemetry is live — an untraced run's payload stays
+        # byte-identical to baselines captured before obs existed.
+        if obs.enabled():
+            payload["metrics"] = jsonable(obs.metrics_snapshot())
+        return stamp_checksum(payload)
 
     def write_bench_json(self, path: str,
                          rows: Optional[List[Row]] = None) -> None:

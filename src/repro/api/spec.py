@@ -257,12 +257,15 @@ class DriftSpec:
     min_windows: int = 2
     cooldown: int = 1
     rho_floor: float = 0.05
-    #: change-point detector beside the KL triggers: "kl" (none extra) or
+    #: change-point detector beside the KL triggers: "kl" (none extra),
     #: "page_hinkley" (mean-shift detector over per-segment observed KL —
-    #: catches burst storms the windowed estimator dilutes)
+    #: catches burst storms the windowed estimator dilutes), or "cusum"
+    #: (one-sided upper CUSUM with an absolute reference level in KL space)
     detector: str = "kl"
     ph_delta: float = 0.005
     ph_lambda: float = 0.25
+    cusum_k: float = 0.01
+    cusum_h: float = 0.15
     # re-tune solver
     retune_starts: int = 32
     retune_steps: int = 200
@@ -296,9 +299,9 @@ class DriftSpec:
             raise ValueError(f"scenario_params only apply to scenario "
                              f"kinds {sorted(SCENARIO_KINDS)}, not "
                              f"{self.kind!r}")
-        if self.detector not in ("kl", "page_hinkley"):
+        if self.detector not in ("kl", "page_hinkley", "cusum"):
             raise ValueError(f"unknown detector {self.detector!r}; use "
-                             "'kl' or 'page_hinkley'")
+                             "'kl', 'page_hinkley', or 'cusum'")
         if self.segments < 1:
             raise ValueError("segments must be >= 1")
         bad = set(self.arms) - {"stale_nominal", "static_robust", "online",

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import LSMSystem, tune_robust_many
 from repro.lsm import EngineConfig, LSMTree
 
@@ -72,11 +73,20 @@ def retune_storm(workloads, rhos, sys, seed: int = 0, design=None,
     the surviving results.
 
     Returns one :class:`repro.core.TuningResult` per request, in order."""
-    from repro.core import tune_nominal_many
     W = np.atleast_2d(np.asarray(workloads, np.float64))
     R = np.asarray(rhos, np.float64).reshape(-1)
     if len(W) != len(R):
         raise ValueError(f"{len(W)} workloads for {len(R)} rhos")
+    obs.count("tuner.storms")
+    obs.count("tuner.storm_requests", len(W))
+    with obs.span("tuner.storm", requests=len(W), pad_pow2=bool(pad_pow2)):
+        return _retune_storm(W, R, sys, seed, design, n_starts, steps, lr,
+                             pad_pow2)
+
+
+def _retune_storm(W, R, sys, seed, design, n_starts, steps, lr,
+                  pad_pow2) -> list:
+    from repro.core import tune_nominal_many
     kw = dict(n_starts=n_starts, steps=steps, lr=lr, seed=seed)
     if design is not None:
         kw["design"] = design

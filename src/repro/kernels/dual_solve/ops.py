@@ -29,6 +29,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from .ref import _GR, dual_solve_warm_ref, g_of_llam
 
 
@@ -84,6 +86,9 @@ def dual_solve_warm(c, w, rho, llam, half_width: float = 0.8,
                     n_local: int = 3, n_golden: int = 6,
                     impl: str = "fused"):
     """Single-lane dispatch point (the robust tuner calls this)."""
+    # Trace-time counter: this body runs when jax (re)traces a caller, so
+    # the count is compilations through this tier, not solver invocations.
+    obs.count("kernel.dispatch.dual_solve." + impl)
     if impl == "fused":
         return dual_solve_warm_fused(c, w, rho, llam, half_width, n_local,
                                      n_golden)
@@ -106,6 +111,8 @@ def dual_solve_warm_batch(C, W, rho, llam, half_width: float = 0.8,
     routes to the lane-tiled kernel; "fused"/"ref" vmap the single-lane
     implementations.
     """
+    # Trace-time counter (see dual_solve_warm): counts jit traces per tier.
+    obs.count("kernel.dispatch.dual_solve_batch." + impl)
     C = jnp.asarray(C, jnp.float32)
     rho = jnp.asarray(rho, jnp.float32)
     llam = jnp.asarray(llam, jnp.float32)

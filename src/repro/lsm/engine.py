@@ -59,6 +59,8 @@ from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 from .bloom import monkey_bits_per_key
 from .planner import make_planner
 from .read_path import point_read_level
@@ -93,6 +95,18 @@ class IOStats:
             queries={k: self.queries[k] - other.queries[k]
                      for k in self.queries},
         )
+
+    def as_dict(self) -> dict:
+        """Plain-dict view (telemetry span attributes, JSON sinks)."""
+        return {
+            "random_reads": self.random_reads,
+            "seq_reads": self.seq_reads,
+            "comp_pages_read": self.comp_pages_read,
+            "comp_pages_written": self.comp_pages_written,
+            "bloom_probes": self.bloom_probes,
+            "bloom_false_positives": self.bloom_false_positives,
+            "queries": dict(self.queries),
+        }
 
     def io_per_query(self, f_a: float = 1.0, f_seq: float = 1.0) -> dict:
         """Measured average logical I/O per query class, write-amortized the
@@ -152,6 +166,9 @@ class LSMTree:
         self.planner = make_planner(config)
         self.stats = IOStats()
         self.flush_seq = 0               # logical clock: flushes so far
+        #: telemetry track label (``"<tenant-or-cell>/<policy>"`` by fleet
+        #: convention); "" keeps this tree on the main trace track
+        self.obs_label = ""
         #: intern-table sweep threshold (doubling schedule): the codec table
         #: is reclaimed when it crosses this, keeping it within 2x the live
         #: object count.  Int-only workloads never intern and never sweep.
@@ -228,11 +245,16 @@ class LSMTree:
             page_bytes=self.cfg.page_bytes, policy=self.cfg.policy,
             policy_params=self.cfg.policy_params)
         if cfg == self.cfg:
+            obs.count("engine.retune.noop")
             return
-        self.flush()
-        self.cfg = cfg
-        self.planner = make_planner(cfg)
-        self._maintain()
+        obs.count("engine.retune")
+        with obs.track(self.obs_label), \
+                obs.span("engine.retune", policy=cfg.policy,
+                         T=cfg.T, buf_entries=cfg.buf_entries):
+            self.flush()
+            self.cfg = cfg
+            self.planner = make_planner(cfg)
+            self._maintain()
 
     # -- bits allocation --------------------------------------------------
 
@@ -293,6 +315,7 @@ class LSMTree:
     def flush(self) -> None:
         if not self.buffer:
             return
+        obs.count("engine.flush")
         keys = np.fromiter(self.buffer.keys(), np.uint64, len(self.buffer))
         vals = np.fromiter(self.buffer.values(), np.int64, len(self.buffer))
         order = np.argsort(keys)
@@ -311,21 +334,36 @@ class LSMTree:
             self.store.reclaim_interned()
             self._intern_sweep_at = max(64, 2 * len(self.store.codec.objects))
 
+    def _execute_plan(self, plan, run, bpk):
+        """``store.execute`` with per-plan telemetry counters attached:
+        plan kinds, compactions per policy, and compaction page deltas."""
+        if not obs.enabled():
+            return self.store.execute(plan, run, self.stats, bpk)
+        s = self.stats
+        read0, written0 = s.comp_pages_read, s.comp_pages_written
+        out = self.store.execute(plan, run, s, bpk)
+        obs.count("engine.plan." + plan.kind)
+        obs.count("engine.compaction." + self.cfg.policy)
+        obs.count("engine.comp_pages_read", s.comp_pages_read - read0)
+        obs.count("engine.comp_pages_written",
+                  s.comp_pages_written - written0)
+        return out
+
     def _push_run(self, level: int, run: RunData) -> None:
         """Plan-execute-replan until the incoming run finds a home."""
         while True:
             occ = self.store.occupancy(min_levels=level)
             plan = self.planner.plan_push(occ, level, len(run), run.flushes)
             if plan.kind == "spill":
-                run = self.store.execute(plan, run, self.stats,
+                run = self._execute_plan(plan, run,
                                          self._bits_per_key(level + 1))
                 level += 1
                 continue
             bpk = self._bits_per_key(level)
-            self.store.execute(plan, run, self.stats, bpk)
+            self._execute_plan(plan, run, bpk)
             for clamp in self.planner.plan_clamps(
                     self.store.occupancy(min_levels=level), level):
-                self.store.execute(clamp, None, self.stats, bpk)
+                self._execute_plan(clamp, None, bpk)
             return
 
     def _maintain(self) -> None:
@@ -350,11 +388,11 @@ class LSMTree:
                 # Monkey bits budget (only in-level plans stay at level)
                 bpk = self._bits_per_key(plan.target_level)
                 if plan.kind == "spill":
-                    out = self.store.execute(plan, None, self.stats, bpk)
+                    out = self._execute_plan(plan, None, bpk)
                     if len(out):
                         self._push_run(plan.target_level, out)
                 else:
-                    self.store.execute(plan, None, self.stats, bpk)
+                    self._execute_plan(plan, None, bpk)
         raise RuntimeError(
             f"{type(self.planner).__name__}.plan_maintenance did not "
             "converge within 100000 rounds")
@@ -471,12 +509,23 @@ class LSMTree:
                              ) -> Tuple[np.ndarray, np.ndarray]:
         """The accounting core of :meth:`point_query_batch`, without
         materializing a Python result list (the fleet executor's path)."""
+        s = self.stats
+        before = ((s.bloom_probes, s.bloom_false_positives, s.random_reads)
+                  if obs.enabled() else None)
         found, enc = self._lookup_batch(keys_arr, resolved=resolved,
                                         found=found, enc=enc,
                                         use_buffer=use_buffer)
         nz1 = int(found.sum())
         self.stats.queries["z1"] += nz1
         self.stats.queries["z0"] += len(keys_arr) - nz1
+        if before is not None:
+            obs.count("engine.read.batches")
+            obs.count("engine.read.keys", len(keys_arr))
+            obs.count("engine.bloom.probes", s.bloom_probes - before[0])
+            obs.count("engine.bloom.false_positives",
+                      s.bloom_false_positives - before[1])
+            obs.count("engine.read.random_reads",
+                      s.random_reads - before[2])
         self._maintain()     # read-triggered policies fire at batch ends
         return found, enc
 
@@ -497,6 +546,9 @@ class LSMTree:
         his = np.asarray(his, np.uint64)
         Q = len(los)
         self.stats.queries["q"] += Q
+        if obs.enabled():
+            obs.count("engine.range.batches")
+            obs.count("engine.range.queries", Q)
         epp = self.cfg.entries_per_page
         pieces = []                         # (qid, keys, vals, recency)
         recency = 0

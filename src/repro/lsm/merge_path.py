@@ -28,6 +28,8 @@ from typing import Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 VALID_MODES = ("numpy", "jnp", "pallas")
 
 _MODE = "numpy"
@@ -78,6 +80,8 @@ def merge_runs(keys_list: Sequence[np.ndarray],
                vals_list: Sequence[np.ndarray]
                ) -> Tuple[np.ndarray, np.ndarray]:
     """Mode-dispatched k-way newest-wins merge (see module docstring)."""
+    if obs.enabled():
+        obs.count("kernel.dispatch.merge." + _MODE)
     if _MODE == "numpy":
         return merge_runs_numpy(keys_list, vals_list)
     from repro.kernels.merge.ops import merge_runs_arrays

@@ -35,6 +35,8 @@ from typing import Tuple
 
 import numpy as np
 
+from repro import obs
+
 VALID_MODES = ("numpy", "jnp", "jnp_limb", "pallas")
 
 _MODE = "numpy"
@@ -106,6 +108,8 @@ def point_read_level_numpy(lv, sub_keys: np.ndarray
 def point_read_level(lv, sub_keys: np.ndarray
                      ) -> Tuple[np.ndarray, np.ndarray, int, int, int]:
     """Mode-dispatched per-level point read (see module docstring)."""
+    if obs.enabled():
+        obs.count("kernel.dispatch.point_read." + _MODE)
     if _MODE == "numpy":
         return point_read_level_numpy(lv, sub_keys)
     from repro.kernels.point_read.ops import point_read_level_arrays

@@ -28,6 +28,8 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
+
 from .engine import IOStats, LSMTree, TOMBSTONE
 from .store import TOMB
 
@@ -237,6 +239,12 @@ def execute_session(tree: LSMTree, plan: SessionPlan,
     whose final insertion triggers the flush that ends the window.
     Per-query I/O accounting is position-independent within a window, so
     measured ``IOStats`` equals per-query execution exactly."""
+    with obs.track(tree.obs_label), obs.span("session.execute") as sp:
+        return _execute_session(tree, plan, f_a, f_seq, sp)
+
+
+def _execute_session(tree: LSMTree, plan: SessionPlan, f_a: float,
+                     f_seq: float, sp) -> SessionResult:
     before = tree.stats.snapshot()
     kinds = plan.kinds
     n = len(kinds)
@@ -281,6 +289,9 @@ def execute_session(tree: LSMTree, plan: SessionPlan,
         boundary = win_end + 1 if win_end < n else n
         win_counts.append(np.bincount(kinds[win_start:boundary],
                                       minlength=4).astype(np.int64))
+        if obs.enabled():
+            obs.event("session.window", index=len(win_counts) - 1,
+                      ops=win_counts[-1].tolist())
         win_start = boundary
         # -- reads of the window, against pre-flush levels ------------------
         pt_hi = int(np.searchsorted(pt_pos, win_end))
@@ -318,9 +329,17 @@ def execute_session(tree: LSMTree, plan: SessionPlan,
     avg = (reads_io + write_io) / max(n, 1)
     window_ops = np.stack(win_counts) if win_counts \
         else np.zeros((0, 4), np.int64)
-    return SessionResult(workload=plan.workload, queries=n,
-                         avg_io_per_query=avg, io=delta,
-                         window_ops=window_ops)
+    result = SessionResult(workload=plan.workload, queries=n,
+                           avg_io_per_query=avg, io=delta,
+                           window_ops=window_ops)
+    if sp:
+        sp.set(label=tree.obs_label, queries=n, windows=len(win_counts),
+               avg_io=round(float(avg), 9),
+               mix=[round(float(x), 9) for x in result.observed_mix],
+               io=delta.as_dict())
+        obs.count("session.executed")
+        obs.count("session.windows", len(win_counts))
+    return result
 
 
 def run_session(tree: LSMTree, existing_keys: np.ndarray, w: np.ndarray,

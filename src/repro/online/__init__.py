@@ -28,8 +28,8 @@ from .estimate import (ESTIMATORS, EWMAEstimator, SlidingWindowEstimator,
                        rho_from_windows, smooth_mix)
 from .memory import (MEMORY_ARMS, FleetArbiter, MemoryBudget, divide_budget,
                      execute_memory_fleet, memory_cost_curves)
-from .retune import (DriftPolicy, PageHinkleyDetector, RetuneRequest,
-                     retune_fleet)
+from .retune import (CusumDetector, DriftPolicy, PageHinkleyDetector,
+                     RetuneRequest, retune_fleet)
 from .session import (ARMS, DriftArmResult, OnlineSession, SegmentRecord,
                       execute_drift)
 
@@ -37,7 +37,8 @@ __all__ = [
     "WindowHistory", "SlidingWindowEstimator", "EWMAEstimator",
     "ESTIMATORS", "make_estimator", "normalize_counts", "kl_np",
     "rho_from_windows", "rho_from_history_batch", "smooth_mix",
-    "DriftPolicy", "PageHinkleyDetector", "RetuneRequest", "retune_fleet",
+    "CusumDetector", "DriftPolicy", "PageHinkleyDetector", "RetuneRequest",
+    "retune_fleet",
     "ARMS", "OnlineSession", "SegmentRecord", "DriftArmResult",
     "execute_drift",
     "MEMORY_ARMS", "MemoryBudget", "FleetArbiter", "divide_budget",

@@ -46,6 +46,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 from .estimate import make_estimator, rho_from_windows, smooth_mix
 from .retune import DriftPolicy, RetuneRequest, retune_fleet
 from .session import DriftArmResult, OnlineSession
@@ -207,6 +209,9 @@ class FleetArbiter:
         self.events.append(dict(segment=-1, reason="initial_division",
                                 shares=[float(s) for s in shares],
                                 retuned=[]))
+        if obs.enabled():
+            obs.event("arbiter.division", **self.events[-1])
+            obs.count("arbiter.divisions")
         return shares
 
     # -- the online trigger ------------------------------------------------
@@ -227,6 +232,13 @@ class FleetArbiter:
             rec = sess.records[-1]
             why = self.policy.decide(rec.kl_est, sess.rho,
                                      len(sess.history), self._since)
+            if obs.enabled():
+                obs.event("arbiter.decide", segment=int(segment), tenant=f,
+                          kl=round(float(rec.kl_est), 9),
+                          rho_live=round(float(sess.rho), 9),
+                          since=min(self._since, 10 ** 9),
+                          reason=why or "none")
+                obs.count("arbiter.trigger." + (why or "none"))
             if why is not None:
                 reasons[f] = why
         if not reasons:
@@ -269,6 +281,9 @@ class FleetArbiter:
             reason=";".join(f"w{f}:{r}" for f, r in sorted(reasons.items())),
             shares=[float(s) for s in shares],
             retuned=[int(f) for f in retune]))
+        if obs.enabled():
+            obs.event("arbiter.division", **self.events[-1])
+            obs.count("arbiter.divisions")
         return shares
 
 
@@ -341,6 +356,7 @@ def execute_memory_fleet(plan) -> Tuple[Dict[Tuple[int, str],
                                     entry_bytes=d.entry_bytes,
                                     policy=plan.policies[f],
                                     policy_params=plan.policy_params[f])
+            tree.obs_label = f"t{f}.{arm}/{plan.policies[f]}"
             populate(tree, d.n_keys, key_space=d.key_space, keys=keys[f])
             sessions[(f, arm)] = OnlineSession(
                 tree, expected=plan.expected[f], rho=plan.rho0, sys=sys_f,

@@ -32,14 +32,25 @@ estimator's memory — Page-Hinkley accumulates deviation-above-mean and
 alarms when the cumulative excursion since its running minimum exceeds
 ``lambda``, catching changes whose per-window magnitude never clears the
 threshold.  Select it per-experiment with ``DriftSpec.detector =
-"page_hinkley"``."""
+"page_hinkley"``.
+
+:class:`CusumDetector` (Page 1954) is the classical one-sided upper CUSUM
+beside it: ``s_t = max(0, s_{t-1} + x_t - k)`` alarms when ``s_t > h``.
+Unlike Page-Hinkley it carries no running mean — the reference level ``k``
+is an absolute bar in KL space, so it reacts faster to a level shift but
+must be re-centred by hand when the baseline moves.  Select with
+``DriftSpec.detector = "cusum"``; every trigger decision is emitted as a
+``drift.decide`` telemetry event (:mod:`repro.obs`), so detector
+comparisons are trace-diffable."""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
+
+from repro import obs
 
 
 class PageHinkleyDetector:
@@ -75,6 +86,31 @@ class PageHinkleyDetector:
         return self.m - self.m_min > self.lam
 
 
+class CusumDetector:
+    """One-sided (upper) CUSUM test over a scalar observation stream.
+
+    ``s_t = max(0, s_{t-1} + x_t - k)``; alarms when ``s_t > h``.  ``k``
+    is the reference level (observations below it drain the statistic),
+    ``h`` the decision interval.  Same stateful contract as
+    :class:`PageHinkleyDetector`: one :meth:`update` per segment,
+    :meth:`reset` after an alarm is acted on."""
+
+    def __init__(self, k: float = 0.01, h: float = 0.15):
+        self.k = float(k)
+        self.h = float(h)
+        self.reset()
+
+    def reset(self) -> None:
+        self.n = 0
+        self.s = 0.0
+
+    def update(self, x: float) -> bool:
+        """Feed one observation; True when the test alarms."""
+        self.n += 1
+        self.s = max(0.0, self.s + float(x) - self.k)
+        return self.s > self.h
+
+
 @dataclasses.dataclass(frozen=True)
 class DriftPolicy:
     kl_threshold: float = 0.05
@@ -85,19 +121,25 @@ class DriftPolicy:
     #: keeps a hedge; also keeps the re-tune on the robust solver path)
     rho_floor: float = 0.05
     #: which change signal arms the trigger: "kl" (threshold + budget, the
-    #: default) or "page_hinkley" (adds the sequential CUSUM-family test on
-    #: the per-segment KL stream; both KL triggers stay active)
+    #: default), "page_hinkley", or "cusum" (each adds its sequential test
+    #: on the per-segment KL stream; both KL triggers stay active)
     detector: str = "kl"
     ph_delta: float = 0.005
     ph_lambda: float = 0.25
+    cusum_k: float = 0.01
+    cusum_h: float = 0.15
 
-    def make_detector(self) -> Optional[PageHinkleyDetector]:
+    def make_detector(self
+                      ) -> Optional[Union[PageHinkleyDetector,
+                                          CusumDetector]]:
         """The stateful sequential detector this policy asks for, or None.
         The policy itself is frozen; the owner (one per deployment) holds
         the detector and feeds it the per-segment KL observations."""
         if self.detector == "page_hinkley":
             return PageHinkleyDetector(delta=self.ph_delta,
                                        lam=self.ph_lambda)
+        if self.detector == "cusum":
+            return CusumDetector(k=self.cusum_k, h=self.cusum_h)
         return None
 
     def decide(self, kl_obs: float, rho_live: float, n_windows: int,
@@ -141,8 +183,11 @@ def retune_fleet(requests: Sequence[RetuneRequest], sys, design=None,
     from repro.checkpoint.store import retune_storm
     if not requests:
         return []
-    W = np.stack([np.asarray(r.w, np.float64) for r in requests])
-    rhos = [float(r.rho) for r in requests]
-    return retune_storm(W, rhos, sys, seed=seed, design=design,
-                        n_starts=n_starts, steps=steps, lr=lr,
-                        pad_pow2=True)
+    obs.count("tuner.retune_fleet")
+    with obs.span("tuner.retune_fleet", requests=len(requests),
+                  reasons=[r.reason for r in requests]):
+        W = np.stack([np.asarray(r.w, np.float64) for r in requests])
+        rhos = [float(r.rho) for r in requests]
+        return retune_storm(W, rhos, sys, seed=seed, design=design,
+                            n_starts=n_starts, steps=steps, lr=lr,
+                            pad_pow2=True)

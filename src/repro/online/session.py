@@ -28,6 +28,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+
 from .estimate import (WindowHistory, kl_np, make_estimator,
                        rho_from_windows, smooth_mix)
 from .retune import DriftPolicy, RetuneRequest, retune_fleet
@@ -140,6 +142,15 @@ class OnlineSession:
             reason = self.policy.decide(kl, self.rho, len(self.history),
                                         self._since_retune,
                                         change_point=change_point)
+            if obs.enabled():
+                obs.event("drift.decide", segment=index,
+                          kl=round(kl, 9), rho_live=round(self.rho, 9),
+                          since_retune=min(self._since_retune, 10 ** 9),
+                          windows=len(self.history),
+                          detector=self.policy.detector,
+                          change_point=bool(change_point),
+                          reason=reason or "none")
+                obs.count("drift.trigger." + (reason or "none"))
             if reason is not None:
                 # re-center on the estimate; budget = measured spread of the
                 # history around it (Algorithm 1, floored)
@@ -162,6 +173,10 @@ class OnlineSession:
         tuning was solved against must land with it."""
         if sys is not None:
             self.sys = sys
+        if obs.enabled():
+            obs.event("drift.apply", reason=reason, rho=round(float(rho), 9),
+                      label=self.tree.obs_label)
+            obs.count("drift.retunes")
         self.tree.retune(tuning.phi, self.sys)
         self.phi = tuning.phi
         self.expected = np.asarray(w_center, np.float64)
@@ -198,7 +213,8 @@ def execute_drift(plan):
                          budget_slack=d.budget_slack,
                          min_windows=d.min_windows, cooldown=d.cooldown,
                          rho_floor=d.rho_floor, detector=d.detector,
-                         ph_delta=d.ph_delta, ph_lambda=d.ph_lambda)
+                         ph_delta=d.ph_delta, ph_lambda=d.ph_lambda,
+                         cusum_k=d.cusum_k, cusum_h=d.cusum_h)
     retune_kw = dict(design=getattr(plan, "design", None),
                      n_starts=d.retune_starts, steps=d.retune_steps,
                      seed=d.retune_seed)
@@ -229,6 +245,7 @@ def execute_drift(plan):
                                 expected_entries=d.n_keys,
                                 entry_bytes=d.entry_bytes, policy=a.policy,
                                 policy_params=a.policy_params)
+        tree.obs_label = f"w{a.widx}.{a.arm}/{a.policy}"
         populate(tree, d.n_keys, key_space=d.key_space, keys=keys[a.widx])
         mode = {"online": "online", "oracle": "oracle"}.get(a.arm, "static")
         expected = plan.schedules[a.widx][0] if a.arm == "oracle" \

@@ -173,9 +173,17 @@ def test_report_bench_payload_schema():
     spec = _spec(workload=WorkloadSpec(indices=(7,), rhos=(1.0,),
                                        nominal=True, bench_n=200))
     report = run_experiment(spec)
-    payload = report.to_bench_payload()
+    from repro import obs
+    with obs.scoped(enabled=False):
+        payload = report.to_bench_payload()
+    # the baseline shape — REPRO_OBS must not change untraced payloads
     assert set(payload) == {"suite", "wall_time_s", "error", "rows",
                             "checksum"}
+    with obs.scoped(enabled=True, clock="ticks"):
+        traced = report.to_bench_payload()
+    # a live telemetry plane merges its metrics block (and re-checksums)
+    assert set(traced) == {"suite", "wall_time_s", "error", "rows",
+                           "metrics", "checksum"}
     assert payload["suite"] == "t"
     assert payload["error"] is None
     for row in payload["rows"]:

@@ -1,0 +1,417 @@
+"""Telemetry plane tests: schema stability, zero-perturbation, jax-free.
+
+Three contracts from the observability design:
+
+* **golden event sequences** — a seeded engine run under the deterministic
+  ``ticks`` clock emits a reproducible event-name sequence (run-twice
+  equality), so telemetry is diffable across commits;
+* **identity** — enabled-vs-disabled engine results are bit-identical
+  (the instrumentation only *reads* IOStats, never steers);
+* **isolation** — ``import repro.obs`` pulls in neither jax nor numpy, so
+  subprocess workers (the fault-injection sandbox) can import it freely.
+
+Every test runs under a save/restore fixture so the suite behaves the same
+with and without ``REPRO_OBS=1`` in the environment (CI runs both legs).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import calibrate as cal
+from repro.obs.core import DEFAULT_CAPACITY
+from repro.obs.trace import chrome_trace, write_trace
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(autouse=True)
+def _isolated_obs():
+    """Save/restore the process-global telemetry object around every test
+    (REPRO_OBS=1 installs one at import; tests must not clobber it)."""
+    prev = obs.get()
+    obs.disable()
+    yield
+    obs.core._T = prev
+
+
+# -- core: ring, counters, spans -------------------------------------------
+
+def test_disabled_is_noop():
+    assert not obs.enabled()
+    with obs.span("x", a=1) as sp:
+        assert not sp                      # NULL_SPAN is falsy
+        sp.set(b=2)                        # and absorbs attributes
+    obs.count("c")
+    obs.gauge("g", 3.5)
+    obs.event("e")
+    assert obs.events_snapshot() == []
+    assert obs.metrics_snapshot() == {}
+
+
+def test_counters_events_and_spans_record():
+    obs.configure(enabled=True, clock="ticks")
+    obs.count("hits")
+    obs.count("hits", 2)
+    obs.gauge("depth", 4)
+    obs.event("boom", where="here")
+    with obs.span("outer", a=1) as sp:
+        sp.set(b=2)
+        with obs.span("inner"):
+            pass
+    snap = obs.metrics_snapshot()
+    assert snap["counters"] == {"hits": 3}
+    assert snap["gauges"] == {"depth": 4}
+    events = obs.events_snapshot()
+    names = [e["name"] for e in events]
+    assert names == ["boom", "inner", "outer"]     # spans emit on exit
+    outer = events[-1]
+    assert outer["kind"] == "span"
+    assert outer["attrs"] == {"a": 1, "b": 2}
+    inner = events[1]
+    assert inner["parent"] == outer["sid"]         # nesting is recorded
+
+
+def test_ring_capacity_and_dropped():
+    obs.configure(enabled=True, capacity=8, clock="ticks")
+    for i in range(20):
+        obs.event("e", i=i)
+    events = obs.events_snapshot()
+    assert len(events) == 8
+    assert [e["attrs"]["i"] for e in events] == list(range(12, 20))
+    assert obs.metrics_snapshot()["events_dropped"] == 12
+    assert obs.metrics_snapshot()["events_total"] == 20
+
+
+def test_track_labels_events():
+    obs.configure(enabled=True, clock="ticks")
+    with obs.track("w0/klsm"):
+        obs.event("inside")
+    obs.event("outside")
+    ev = obs.events_snapshot()
+    assert ev[0]["track"] == "w0/klsm"
+    assert ev[1]["track"] == ""
+
+
+def test_scoped_restores_previous():
+    obs.configure(enabled=True, clock="ticks")
+    obs.count("before")
+    with obs.scoped(enabled=True, clock="ticks"):
+        obs.count("inside")
+        assert obs.metrics_snapshot()["counters"] == {"inside": 1}
+    assert obs.metrics_snapshot()["counters"] == {"before": 1}
+
+
+def test_jsonl_sink_streams(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    obs.configure(enabled=True, clock="ticks", jsonl_path=path)
+    obs.event("a", n=1)
+    with obs.span("s"):
+        pass
+    obs.get().close()
+    lines = [json.loads(l) for l in open(path)]
+    assert [l["name"] for l in lines] == ["a", "s"]
+    assert lines[1]["kind"] == "span"
+
+
+def test_configure_defaults():
+    t = obs.configure(enabled=True)
+    assert t.capacity == DEFAULT_CAPACITY and t.clock == "wall"
+    with pytest.raises(ValueError):
+        obs.configure(enabled=True, clock="sundial")
+
+
+# -- golden event sequences -------------------------------------------------
+
+def _tiny_engine_run():
+    """A seeded single-tree workload; returns (event names, results)."""
+    from repro.api import (DesignSpec, ExperimentSpec, TrialSpec,
+                           WorkloadSpec, run_experiment)
+    spec = ExperimentSpec(
+        name="obs_golden",
+        workload=WorkloadSpec(workloads=((0.25, 0.25, 0.25, 0.25),),
+                              rhos=(), nominal=True),
+        design=DesignSpec(fixed=(4.0, 4.0, 1.0), policies=("klsm",)),
+        trial=TrialSpec(n_keys=4_000, n_queries=400,
+                        sessions=((0.4, 0.2, 0.2, 0.2),),
+                        key_space=2 ** 20, key_seed=7,
+                        session_seeds=(11,)),
+        system=(("N", 4000.0), ("entry_bits", 512.0),
+                ("page_bits", 4096.0 * 8), ("bits_per_entry", 6.0),
+                ("min_buf_bits", 512.0 * 64), ("s_rq", 1e-3),
+                ("max_T", 30.0)),
+    )
+    report = run_experiment(spec)
+    res = report.fleet[((0, None), "klsm")]
+    return report, res
+
+
+def test_golden_event_sequence_reproducible():
+    with obs.scoped(enabled=True, clock="ticks"):
+        _tiny_engine_run()
+        first = [(e["kind"], e["name"], e["track"])
+                 for e in obs.events_snapshot()]
+        snap1 = obs.metrics_snapshot()
+    with obs.scoped(enabled=True, clock="ticks"):
+        _tiny_engine_run()
+        second = [(e["kind"], e["name"], e["track"])
+                  for e in obs.events_snapshot()]
+        snap2 = obs.metrics_snapshot()
+    assert first == second
+    assert snap1["counters"] == snap2["counters"]
+    assert first, "instrumented engine emitted no events"
+    names = {n for _, n, _ in first}
+    assert "session.execute" in names
+    assert "trial.populate" in names
+    assert any(n.startswith("engine.") for n in snap1["counters"])
+    assert any(n.startswith("kernel.dispatch.") for n in snap1["counters"])
+    # the fleet convention: track labels end with /<policy>
+    assert any(t.endswith("/klsm") for _, _, t in first)
+
+
+def test_enabled_vs_disabled_bit_identical():
+    with obs.scoped(enabled=False):
+        _, res_off = _tiny_engine_run()
+    with obs.scoped(enabled=True, clock="ticks"):
+        _, res_on = _tiny_engine_run()
+    assert len(res_on) == len(res_off) == 1
+    assert res_on[0].avg_io_per_query == res_off[0].avg_io_per_query
+    assert np.array_equal(res_on[0].window_ops, res_off[0].window_ops)
+    assert np.array_equal(res_on[0].observed_mix, res_off[0].observed_mix)
+
+
+def test_session_span_carries_calibration_attrs():
+    with obs.scoped(enabled=True, clock="ticks"):
+        _tiny_engine_run()
+        spans = [e for e in obs.events_snapshot()
+                 if e["kind"] == "span" and e["name"] == "session.execute"]
+    assert len(spans) == 1
+    attrs = spans[0]["attrs"]
+    assert len(attrs["mix"]) == 4
+    assert attrs["avg_io"] > 0
+    assert attrs["queries"] == 400
+    assert sum(attrs["io"]["queries"].values()) == 400
+
+
+# -- jax-free import (subprocess workers) -----------------------------------
+
+def test_obs_import_is_jax_and_numpy_free():
+    code = ("import sys, repro.obs, repro.obs.trace\n"
+            "assert 'jax' not in sys.modules, 'obs pulled in jax'\n"
+            "assert 'numpy' not in sys.modules, 'obs pulled in numpy'\n"
+            "print('clean')\n")
+    env = dict(os.environ, PYTHONPATH=os.path.abspath(SRC))
+    env.pop("REPRO_OBS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == "clean"
+
+
+# -- chrome trace export ----------------------------------------------------
+
+def test_chrome_trace_schema(tmp_path):
+    obs.configure(enabled=True, clock="ticks")
+    with obs.track("w0/klsm"):
+        with obs.span("engine.flush", entries=5):
+            obs.event("drift.decide", kl=0.1)
+    obs.count("engine.flush")
+    doc = chrome_trace(obs.events_snapshot(), clock="ticks",
+                       counters=obs.metrics_snapshot()["counters"])
+    assert doc["displayTimeUnit"] == "ms"
+    phases = [e["ph"] for e in doc["traceEvents"]]
+    assert "X" in phases and "i" in phases and "M" in phases
+    assert "C" in phases                       # terminal counter samples
+    x = next(e for e in doc["traceEvents"] if e["ph"] == "X")
+    assert x["name"] == "engine.flush" and x["dur"] >= 0
+    # one thread per track: metadata names the w0/klsm lane
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert any(e["args"].get("name") == "w0/klsm" for e in meta)
+
+    path = str(tmp_path / "trace.json")
+    n = write_trace(path)
+    assert n == len(obs.events_snapshot())
+    on_disk = json.load(open(path))
+    assert on_disk["traceEvents"]
+
+
+def test_write_trace_disabled_writes_empty_doc(tmp_path):
+    path = str(tmp_path / "trace.json")
+    assert write_trace(path) == 0
+    assert json.load(open(path))["traceEvents"] == []
+
+
+# -- calibration ------------------------------------------------------------
+
+def _synthetic_events(c, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    events = []
+    eye = np.eye(4) * 0.85 + 0.05
+    for i in range(n):
+        mix = eye[i % 4] / eye[i % 4].sum() if i < 4 else \
+            rng.dirichlet((1.0,) * 4)
+        events.append({
+            "seq": i, "kind": "span", "name": "session.execute",
+            "ts": float(i), "track": "w0/klsm", "dur": 1.0,
+            "sid": i + 1, "parent": 0,
+            "attrs": {"mix": [float(x) for x in mix],
+                      "avg_io": float(mix @ c), "queries": 100},
+        })
+    return events
+
+
+def test_calibration_recovers_true_weights():
+    c_true = np.array([1.5, 0.4, 2.0, 3.0])
+    c_hand = c_true * np.array([1.3, 0.7, 1.1, 0.9])   # the "hand" model
+    events = _synthetic_events(c_true)
+    payload = cal.calibrate(events, model_costs={"klsm": c_hand})
+    fit = payload["policies"]["klsm"]
+    assert payload["all_fitted_ge_hand"]
+    assert fit["closeness_fitted"] >= fit["closeness_hand"]
+    np.testing.assert_allclose(fit["c_fitted"], c_true, rtol=1e-4)
+    # alpha is the hand constants' measured correction
+    np.testing.assert_allclose(fit["alpha"],
+                               c_true / c_hand, rtol=1e-4)
+
+
+def test_calibration_artifact_roundtrip(tmp_path):
+    from repro.faults import checksum_ok
+    c = np.array([1.0, 0.5, 2.0, 3.0])
+    payload = cal.calibrate(_synthetic_events(c), model_costs={"klsm": c})
+    path = str(tmp_path / "calibration.json")
+    cal.write_calibration(path, payload)
+    on_disk = json.load(open(path))
+    assert checksum_ok(on_disk)
+    assert on_disk["schema"] == cal.SCHEMA
+    assert "klsm" in on_disk["policies"]
+
+
+def test_calibration_skips_unseen_policies():
+    c = np.array([1.0, 0.5, 2.0, 3.0])
+    payload = cal.calibrate(_synthetic_events(c),
+                            model_costs={"klsm": c, "partial": c})
+    assert set(payload["policies"]) == {"klsm"}   # no partial samples
+
+
+# -- shard attempt surfacing (satellite bugfix) -----------------------------
+
+def test_flapping_shard_attempts_surface_in_report():
+    """A shard that crashes once and recovers used to vanish from the
+    report (per-attempt latencies were dropped on success); now every
+    attempt is logged, the walls carry the count, rows() renders the
+    flapping-shard summary, and telemetry sees the fault."""
+    from repro.api import (DesignSpec, ExperimentSpec, FaultSpec,
+                           TrialSpec, WorkloadSpec, run_experiment)
+    spec = ExperimentSpec(
+        name="flap",
+        workload=WorkloadSpec(indices=(7, 11), rhos=(), nominal=True,
+                              bench_n=0),
+        design=DesignSpec(fixed=(6.0, 4.0, 1.0)),
+        trial=TrialSpec(n_keys=4000, n_queries=300,
+                        sessions=((0.05, 0.85, 0.05, 0.05),)),
+        system=(("N", 8000.0), ("bits_per_entry", 6.0), ("max_T", 20.0)),
+        backend="subprocess",
+        backend_params=(("workers", 2), ("max_retries", 2),
+                        ("backoff_s", 0.01), ("timeout_s", 120.0)),
+        faults=(FaultSpec(kind="crash", shards=(0,), max_hits=1, seed=3),),
+    )
+    with obs.scoped(enabled=True, clock="ticks"):
+        report = run_experiment(spec)
+        counters = obs.metrics_snapshot()["counters"]
+        names = {e["name"] for e in obs.events_snapshot()}
+    log = report.shard_attempts
+    assert log, "per-attempt log missing from Report"
+    assert report.walls["shard_attempt_count"] == len(log)
+    shard0 = [a for a in log if a["shard"] == 0]
+    assert [a["ok"] for a in shard0] == [False, True]     # flapped
+    assert all(a["latency_s"] >= 0 for a in log)
+    row = next(r for r in report.rows() if r.name.endswith("_shards"))
+    assert row.derived["flapping_shards"] == [0]
+    assert row.derived["failed_attempts"] == 1
+    assert row.derived["attempts"] == len(log)
+    assert counters["shard.failed_attempts"] == 1
+    assert counters["shard.attempts"] == len(log)
+    assert "shard.fault_injected" in names
+    assert "shard.attempt" in names
+
+
+# -- CUSUM detector (satellite) ---------------------------------------------
+
+def test_cusum_fires_in_session_and_is_observable():
+    """With the KL triggers parked out of reach, sustained drift fires the
+    CUSUM change-point path — and every per-segment decision lands in the
+    telemetry ring as a ``drift.decide`` event naming the detector."""
+    from repro.core import LSMSystem
+    from repro.lsm import EngineConfig, LSMTree, materialize_session, \
+        populate
+    from repro.online import CusumDetector, DriftPolicy, OnlineSession
+    sys_ = LSMSystem().replace(N=1500.0, entry_bits=512.0,
+                               bits_per_entry=6.0)
+    tree = LSMTree(EngineConfig(T=4, buf_entries=64,
+                                mfilt_bits_per_entry=6.0,
+                                expected_entries=1500))
+    keys = populate(tree, 1500, seed=11, key_space=2 ** 20)
+    policy = DriftPolicy(kl_threshold=99.0, budget_slack=1e9,
+                         min_windows=1, cooldown=1,
+                         detector="cusum", cusum_k=0.0, cusum_h=0.05)
+    assert isinstance(policy.make_detector(), CusumDetector)
+    expected = (0.01, 0.01, 0.01, 0.97)
+    sess = OnlineSession(tree, expected=expected, rho=0.0, sys=sys_,
+                         mode="online", policy=policy)
+    matched = materialize_session(keys, expected, n_queries=300, seed=1,
+                                  key_space=2 ** 20)
+    drifted = materialize_session(keys, (0.4, 0.4, 0.1, 0.1),
+                                  n_queries=300, seed=2, key_space=2 ** 20)
+    with obs.scoped(enabled=True, clock="ticks"):
+        for s in range(2):
+            sess.execute_segment(matched, expected, s)
+        assert sess.take_request() is None
+        reasons = []
+        for s in range(2, 5):
+            sess.execute_segment(drifted, (0.4, 0.4, 0.1, 0.1), s)
+            req = sess.take_request()
+            if req is not None:
+                reasons.append(req.reason)
+        decides = [e for e in obs.events_snapshot()
+                   if e["name"] == "drift.decide"]
+        counters = obs.metrics_snapshot()["counters"]
+    assert "change_point" in reasons
+    assert len(decides) == 5                     # one per segment
+    assert all(e["attrs"]["detector"] == "cusum" for e in decides)
+    assert any(e["attrs"]["reason"] == "change_point" for e in decides)
+    assert counters["drift.trigger.change_point"] >= 1
+
+
+def test_cusum_detector_alarm_and_reset():
+    from repro.online import CusumDetector
+    det = CusumDetector(k=0.05, h=0.2)
+    det.reset()
+    assert not any(det.update(0.04) for _ in range(50))   # under drift slack
+    det.reset()
+    fired = [det.update(0.15) for _ in range(5)]
+    assert fired[-1] and not fired[0]                     # accumulates
+    det.reset()
+    assert det.s == 0.0
+
+
+def test_drift_spec_accepts_cusum():
+    from repro.api.spec import DriftSpec
+    from repro.online import CusumDetector
+    from repro.online.retune import DriftPolicy
+    target = (0.1, 0.1, 0.1, 0.7)
+    d = DriftSpec(target=target, detector="cusum", cusum_k=0.02,
+                  cusum_h=0.1)
+    pol = DriftPolicy(detector="cusum", cusum_k=d.cusum_k,
+                      cusum_h=d.cusum_h)
+    det = pol.make_detector()
+    assert isinstance(det, CusumDetector)
+    assert det.k == 0.02 and det.h == 0.1
+    with pytest.raises(ValueError, match="cusum"):
+        DriftSpec(target=target, detector="mahalanobis")
